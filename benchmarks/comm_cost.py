@@ -1,0 +1,37 @@
+"""Paper Fig. 7: communication volume (GB) to reach a target network-wide
+accuracy, per algorithm and cluster configuration. DEPRL excluded as in the
+paper (Sec. V-E)."""
+from __future__ import annotations
+
+from . import common
+
+
+def run(quick: bool = True) -> dict:
+    cluster_cfgs, rounds, spec, cfg = common.scaled(quick)
+    target = 0.80 if quick else 0.63
+    algos = [a for a in common.ALGOS if a != "deprl"]
+    rows, payload = [], {}
+    for sizes in cluster_cfgs:
+        ds = common.make_ds(spec, sizes, ("rot0", "rot180"))
+        per = {}
+        for algo in algos:
+            res = common.run_algo(algo, cfg, ds, rounds, quick,
+                                  target_acc=target)
+            b = res.comm.bytes_to_target(target)
+            per[algo] = b
+            payload[f"{sizes}/{algo}"] = {
+                "bytes_to_target": b, "target": target,
+                "rounds_run": res.comm.rounds[-1] if res.comm.rounds else 0}
+        base = per.get("el")
+        rows.append([f"{sizes[0]}:{sizes[1]}"] + [
+            ("n/r" if per[a] is None else f"{per[a]/1e6:.1f} MB") for a in algos
+        ] + [("n/a" if (per["facade"] is None or not base) else
+              f"{(1 - per['facade']/base)*100:+.1f}% vs EL")])
+    print(f"target accuracy: {target}")
+    print(common.table(["config", *algos, "facade saving"], rows))
+    common.save("comm_cost", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

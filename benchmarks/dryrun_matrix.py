@@ -1,0 +1,66 @@
+"""Systems benchmark: render the §Dry-run / §Roofline tables from the
+records produced by ``python -m repro.launch.dryrun`` (results/dryrun/).
+
+Does not recompute anything — the 512-device lowering runs in its own
+process (device-count pinning); this module aggregates and validates.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from . import common
+
+DRYRUN_DIR = pathlib.Path(__file__).resolve().parent.parent / "results" / "dryrun"
+
+HBM_PER_CHIP_GB = 16.0  # TPU v5e
+
+
+def load(pattern: str):
+    recs = []
+    for f in sorted(DRYRUN_DIR.glob(pattern)):
+        with f.open() as fh:
+            recs += [json.loads(l) for l in fh if l.strip()]
+    # newest record wins per (arch, shape, mesh, tag)
+    dedup = {}
+    for r in recs:
+        dedup[(r["arch"], r["shape"], r["mesh"], r.get("tag", ""))] = r
+    return list(dedup.values())
+
+
+def run(quick: bool = True) -> dict:
+    recs = [r for r in load("dryrun_*.jsonl") if r.get("tag", "") == ""]
+    if not recs:
+        print("no dry-run records; run `python -m repro.launch.dryrun --all` "
+              "(and --multi-pod) first")
+        return {}
+    rows = []
+    ok = fail = skip = 0
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if r["status"] == "skipped":
+            skip += 1
+            continue
+        if r["status"] == "fail":
+            fail += 1
+            rows.append([r["arch"], r["shape"], r["mesh"], "FAIL",
+                         "", "", "", ""])
+            continue
+        ok += 1
+        fits = "Y" if r["peak_gbytes_per_dev"] <= HBM_PER_CHIP_GB else "over"
+        rows.append([
+            r["arch"], r["shape"], r["mesh"],
+            f"{r['peak_gbytes_per_dev']:.1f}GB/{fits}",
+            f"{r['t_compute_s']:.3f}", f"{r['t_memory_s']:.3f}",
+            f"{r['t_collective_s']:.3f}", r["dominant"]])
+    print(common.table(
+        ["arch", "shape", "mesh", "peak/fits", "t_comp", "t_mem",
+         "t_coll", "dominant"], rows))
+    print(f"\n{ok} compiled, {fail} failed, {skip} skipped "
+          f"(full-attention long_500k carve-outs)")
+    payload = {"n_ok": ok, "n_fail": fail, "n_skip": skip, "records": recs}
+    common.save("dryrun_matrix", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,29 @@
+"""Paper Fig. 5 (+ App. D): highest observed fair accuracy (Eq. 5,
+lambda = 2/3) per algorithm and cluster configuration."""
+from __future__ import annotations
+
+from . import common
+
+
+def run(quick: bool = True) -> dict:
+    cluster_cfgs, rounds, spec, cfg = common.scaled(quick)
+    rows, payload = [], {}
+    for sizes in cluster_cfgs:
+        ds = common.make_ds(spec, sizes, ("rot0", "rot180"))
+        best = {}
+        for algo in common.ALGOS:
+            res = common.run_algo(algo, cfg, ds, rounds, quick)
+            best[algo] = res.best_fair_acc()
+            payload[f"{sizes}/{algo}"] = {
+                "best_fair_acc": best[algo],
+                "fair_acc_history": res.fair_acc}
+        winner = max(best, key=best.get)
+        rows.append([f"{sizes[0]}:{sizes[1]}"]
+                    + [f"{best[a]:.3f}" for a in common.ALGOS] + [winner])
+    print(common.table(["config", *common.ALGOS, "best"], rows))
+    common.save("fair_accuracy", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,27 @@
+"""Paper Fig. 6: demographic parity (Eq. 1) and equalized odds (Eq. 2) of
+the final models, per algorithm and cluster configuration."""
+from __future__ import annotations
+
+from . import common
+
+
+def run(quick: bool = True) -> dict:
+    cluster_cfgs, rounds, spec, cfg = common.scaled(quick)
+    rows, payload = [], {}
+    for sizes in cluster_cfgs:
+        ds = common.make_ds(spec, sizes, ("rot0", "rot180"))
+        for algo in common.ALGOS:
+            res = common.run_algo(algo, cfg, ds, rounds, quick)
+            rows.append([f"{sizes[0]}:{sizes[1]}", algo,
+                         f"{res.dp:.4f}", f"{res.eo:.4f}",
+                         f"{min(res.final_acc):.3f}"])
+            payload[f"{sizes}/{algo}"] = {
+                "dp": res.dp, "eo": res.eo, "acc_min": min(res.final_acc)}
+    print(common.table(["config", "algo", "DP (dn)", "EO (dn)",
+                        "acc_min (up)"], rows))
+    common.save("fairness_dp_eo", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,28 @@
+"""Paper Fig. 8 (Sec. V-F): sensitivity to the number of model heads k.
+Three clusters (rot0/rot90/rot180) with sizes scaled from the paper's
+20:10:2; k sweeps 1..5. k=1 should behave like EL; overestimating k should
+stay close to the optimum k=3."""
+from __future__ import annotations
+
+from . import common
+
+
+def run(quick: bool = True) -> dict:
+    _, rounds, spec, cfg = common.scaled(quick)
+    sizes = (5, 2, 1) if quick else (20, 10, 2)
+    ds = common.make_ds(spec, sizes, ("rot0", "rot90", "rot180"))
+    rows, payload = [], {}
+    for k in range(1, 6):
+        res = common.run_algo("facade", cfg, ds, rounds, quick, k=k)
+        accs = [f"{a:.3f}" for a in res.final_acc]
+        rows.append([k, *accs, f"{res.best_fair_acc():.3f}"])
+        payload[f"k={k}"] = {"final_acc": res.final_acc,
+                             "fair_acc": res.best_fair_acc()}
+    print(common.table(
+        ["k", "acc_c0", "acc_c1", "acc_c2", "fair_acc"], rows))
+    common.save("k_sensitivity", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,87 @@
+"""Kernel micro-benchmarks: wall-time of the pure-jnp oracle vs the Pallas
+kernel in interpret mode, plus the STRUCTURAL comparison that matters on
+CPU: HBM traffic implied by each formulation (the oracle materializes the
+full score/logit tensors; the kernels tile them through VMEM).
+
+Interpret-mode wall time is NOT a TPU speed estimate — the structural
+bytes columns are the roofline-relevant output.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import ops as fa
+from repro.kernels.head_select import ops as hs
+from repro.kernels.head_select.ref import head_losses_ref
+from repro.kernels.rwkv6 import ops as rw
+
+from . import common
+
+
+def _time(fn, *args, reps=3, **kw):
+    fn(*args, **kw)  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e3  # ms
+
+
+def run(quick: bool = True) -> dict:
+    rows, payload = [], {}
+    key = jax.random.PRNGKey(0)
+
+    # flash attention: oracle materializes B*H*S^2 fp32 scores
+    b, hq, hkv, s, d = (1, 4, 2, 512, 64) if quick else (2, 8, 2, 2048, 128)
+    q = 0.3 * jax.random.normal(key, (b, hq, s, d))
+    k = 0.3 * jax.random.normal(key, (b, hkv, s, d))
+    v = 0.3 * jax.random.normal(key, (b, hkv, s, d))
+    t_ref = _time(fa.attention_ref, q, k, v)
+    t_ker = _time(fa.flash_attention_op, q, k, v, interpret=True)
+    bytes_ref = b * hq * s * s * 4               # score tensor in HBM
+    bytes_ker = 128 * 128 * 4                    # one VMEM tile
+    rows.append(["flash_attention", f"{t_ref:.1f}", f"{t_ker:.1f}",
+                 f"{bytes_ref/1e6:.1f} MB", f"{bytes_ker/1e3:.0f} KB"])
+    payload["flash_attention"] = {
+        "ms_ref": t_ref, "ms_interp": t_ker,
+        "hbm_bytes_ref": bytes_ref, "vmem_tile_bytes": bytes_ker}
+
+    # head-select fused CE: oracle materializes K*T*V fp32 logits
+    kk, t, dd, vv = (3, 512, 64, 1024) if quick else (3, 4096, 256, 32768)
+    feats = 0.5 * jax.random.normal(key, (t, dd))
+    heads = 0.05 * jax.random.normal(key, (kk, dd, vv))
+    labels = jax.random.randint(key, (t,), 0, vv, dtype=jnp.int32)
+    t_ref = _time(head_losses_ref, feats, heads, labels)
+    t_ker = _time(hs.facade_head_losses, feats, heads, labels,
+                  interpret=True)
+    rows.append(["head_select(kCE)", f"{t_ref:.1f}", f"{t_ker:.1f}",
+                 f"{kk*t*vv*4/1e6:.1f} MB", f"{128*512*4/1e3:.0f} KB"])
+    payload["head_select"] = {"ms_ref": t_ref, "ms_interp": t_ker,
+                              "hbm_bytes_ref": kk * t * vv * 4}
+
+    # rwkv6 wkv
+    b2, t2, h2, hd2 = (1, 256, 2, 32) if quick else (2, 1024, 4, 64)
+    r = 0.3 * jax.random.normal(key, (b2, t2, h2, hd2))
+    kk2 = 0.3 * jax.random.normal(key, (b2, t2, h2, hd2))
+    v2 = 0.3 * jax.random.normal(key, (b2, t2, h2, hd2))
+    w2 = jnp.exp(-jnp.exp(0.3 * jax.random.normal(key, (b2, t2, h2, hd2))))
+    u2 = 0.3 * jax.random.normal(key, (h2, hd2))
+    t_ref = _time(rw.wkv_ref, r, kk2, v2, w2, u2)
+    t_ker = _time(rw.wkv_op, r, kk2, v2, w2, u2, interpret=True)
+    rows.append(["rwkv6_wkv", f"{t_ref:.1f}", f"{t_ker:.1f}",
+                 f"{b2*t2*h2*hd2*hd2*4/1e6:.1f} MB(T steps)",
+                 f"{64*hd2*4/1e3:.0f} KB"])
+    payload["rwkv6_wkv"] = {"ms_ref": t_ref, "ms_interp": t_ker}
+
+    print(common.table(
+        ["kernel", "oracle ms", "interp ms", "oracle HBM", "kernel VMEM"],
+        rows))
+    common.save("kernel_bench", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

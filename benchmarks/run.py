@@ -1,0 +1,60 @@
+"""Run every paper-table benchmark: ``python -m benchmarks.run [--full]
+[--only NAME ...]``.
+
+One module per paper table/figure (DESIGN.md §9). ``--quick`` (default)
+scales node counts / rounds to CPU; ``--full`` uses paper-shaped configs.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import (color_shift, comm_cost, dryrun_matrix, fair_accuracy,
+               fairness_dp_eo, k_sensitivity, kernel_bench, label_skew,
+               percluster_accuracy, settlement, warmup_ablation)
+
+SUITES = {
+    "percluster_accuracy": percluster_accuracy,   # Fig. 3 / Tab. II
+    "fair_accuracy": fair_accuracy,               # Fig. 5 / App. D
+    "fairness_dp_eo": fairness_dp_eo,             # Fig. 6
+    "comm_cost": comm_cost,                       # Fig. 7
+    "k_sensitivity": k_sensitivity,               # Fig. 8
+    "settlement": settlement,                     # Fig. 9 / App. F
+    "warmup_ablation": warmup_ablation,           # App. F mitigation
+    "label_skew": label_skew,                     # App. G
+    "color_shift": color_shift,                   # App. H
+    "kernel_bench": kernel_bench,                 # kernels (systems)
+    "dryrun_matrix": dryrun_matrix,               # §Dry-run / §Roofline
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true",
+                    help="paper-shaped configs (slow on CPU)")
+    ap.add_argument("--only", nargs="+", choices=sorted(SUITES),
+                    default=None)
+    args = ap.parse_args(argv)
+
+    names = args.only or list(SUITES)
+    failures = []
+    for name in names:
+        print(f"\n{'='*72}\n== {name}\n{'='*72}", flush=True)
+        t0 = time.time()
+        try:
+            SUITES[name].run(quick=not args.full)
+            print(f"[{name}] done in {time.time()-t0:.1f}s", flush=True)
+        except Exception as e:  # keep the suite going; report at the end
+            import traceback
+            traceback.print_exc()
+            failures.append((name, repr(e)))
+    if failures:
+        print("\nFAILED:", failures)
+        return 1
+    print(f"\nall {len(names)} benchmark suites completed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

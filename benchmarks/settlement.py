@@ -1,0 +1,50 @@
+"""Paper Fig. 9 / Sec. V-G / App. F: head-selection (settlement) dynamics.
+Records which head each node selects per round; reports the round by which
+each cluster settles (all its nodes pick the same head) and whether the
+assignment is a bijection cluster->head."""
+from __future__ import annotations
+
+import numpy as np
+
+from . import common
+
+
+def settle_round(history, node_cluster, k_clusters):
+    """First round after which each cluster's nodes all agree, forever."""
+    node_cluster = np.asarray(node_cluster)
+    agreed_from = None
+    for rnd, cid in history:
+        cid = np.asarray(cid)
+        ok = all(len(set(cid[node_cluster == c].tolist())) == 1
+                 for c in range(k_clusters))
+        if ok and agreed_from is None:
+            agreed_from = rnd
+        elif not ok:
+            agreed_from = None
+    return agreed_from
+
+
+def run(quick: bool = True) -> dict:
+    _, rounds, spec, cfg = common.scaled(quick)
+    sizes = (5, 2, 1) if quick else (20, 10, 2)
+    ds = common.make_ds(spec, sizes, ("rot0", "rot90", "rot180"))
+    res = common.run_algo("facade", cfg, ds, rounds, quick, k=3)
+
+    sr = settle_round(res.cluster_history, ds.node_cluster, ds.k)
+    final_cid = np.asarray(res.cluster_history[-1][1])
+    heads = [sorted(set(final_cid[np.asarray(ds.node_cluster) == c].tolist()))
+             for c in range(ds.k)]
+    distinct = len({h[0] for h in heads if len(h) == 1}) == ds.k
+
+    rows = [[c, f"{sizes[c]} nodes", str(heads[c])] for c in range(ds.k)]
+    print(common.table(["cluster", "size", "selected head(s)"], rows))
+    print(f"settled at round: {sr}   bijective assignment: {distinct}")
+    payload = {"settle_round": sr, "bijective": bool(distinct),
+               "history": [(int(r), np.asarray(c).tolist())
+                           for r, c in res.cluster_history]}
+    common.save("settlement", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Appendix F ablation: shared-head warmup rounds vs settlement quality.
+
+The paper mitigates non-settlement (a head never selected, all clusters on
+one head) by starting with a few EL-style rounds where all heads share
+weights. This benchmark sweeps warmup_rounds over seeds and reports the
+settlement rate and minority accuracy with/without warmup.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from . import common
+from .settlement import settle_round
+
+
+def run(quick: bool = True) -> dict:
+    _, rounds, spec, cfg = common.scaled(quick)
+    sizes = (5, 2, 1) if quick else (20, 10, 2)
+    seeds = (0, 1, 2) if quick else tuple(range(8))
+    rows, payload = [], {}
+    for warmup in (0, 5):
+        settled, fair, minority = [], [], []
+        for seed in seeds:
+            ds = common.make_ds(spec, sizes, ("rot0", "rot90", "rot180"))
+            res = common.run_algo("facade", cfg, ds, rounds, quick, k=3,
+                                  warmup_rounds=warmup, seed=seed)
+            sr = settle_round(res.cluster_history, ds.node_cluster, ds.k)
+            settled.append(sr is not None)
+            fair.append(res.best_fair_acc())
+            minority.append(res.final_acc[-1])
+        rows.append([warmup, f"{np.mean(settled):.2f}",
+                     f"{np.mean(fair):.3f}", f"{np.mean(minority):.3f}"])
+        payload[f"warmup={warmup}"] = {
+            "settle_rate": float(np.mean(settled)),
+            "fair_acc": float(np.mean(fair)),
+            "acc_minority": float(np.mean(minority)),
+            "n_seeds": len(seeds)}
+    print(common.table(
+        ["warmup_rounds", "settle rate", "fair_acc", "acc_minority"], rows))
+    common.save("warmup_ablation", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

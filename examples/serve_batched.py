@@ -1,0 +1,88 @@
+"""Serve per-cluster FACADE models with batched requests.
+
+    PYTHONPATH=src python examples/serve_batched.py
+
+The deployment story of the paper: after decentralized training, each
+cluster owns a specialized model (shared core + its head). A serving tier
+routes each request to its cluster's model and decodes with a KV cache.
+This example builds two cluster models from one FACADE state, batches
+mixed-cluster requests, groups them per cluster, and decodes.
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs  # noqa: F401
+from repro.core import split
+from repro.core.bindings import make_binding
+from repro.core.state import init_facade_state
+from repro.models import transformer
+from repro.models.base import get_config
+
+
+def main():
+    arch = "llama3.2-1b"
+    cfg = get_config(arch, smoke=True)
+    binding = make_binding(cfg)
+    n, k = 4, 2
+
+    # stand-in for a trained FACADE state (in practice: checkpoint.load)
+    state = init_facade_state(binding, jax.random.PRNGKey(0), n, k,
+                              head_jitter=0.05)
+    state = state._replace(cluster_id=jnp.asarray([0, 0, 1, 1], jnp.int32))
+
+    # one deployable model per cluster: core of a member node + cluster head
+    cluster_models = []
+    for c in range(k):
+        node = int(np.argmax(np.asarray(state.cluster_id) == c))
+        core = jax.tree.map(lambda l: l[node], state.cores)
+        head = split.select_head(
+            jax.tree.map(lambda l: l[node], state.heads), jnp.int32(c))
+        cluster_models.append(split.merge_params(core, head))
+
+    # --- mixed request queue: (cluster_id, prompt tokens) ------------------
+    rng = np.random.default_rng(0)
+    prompt_len, gen_len = 32, 16
+    requests = [(int(rng.integers(0, k)),
+                 rng.integers(1, cfg.vocab_size, size=prompt_len)
+                 .astype(np.int32)) for _ in range(8)]
+
+    @jax.jit
+    def prefill(params, toks):
+        return transformer.prefill(cfg, params, toks, cache_extra=gen_len)
+
+    @jax.jit
+    def decode(params, cache, toks, pos):
+        return transformer.decode_step(cfg, params, cache, toks, pos)
+
+    # --- group per cluster, batch, decode ----------------------------------
+    for c in range(k):
+        batch = [t for cc, t in requests if cc == c]
+        if not batch:
+            continue
+        toks = jnp.asarray(np.stack(batch))
+        params = cluster_models[c]
+        logits, cache = prefill(params, toks)
+        last = jnp.argmax(logits, -1).astype(jnp.int32)
+        outs = [np.asarray(last)]
+        pos = jnp.full((len(batch),), prompt_len, jnp.int32)
+        for _ in range(gen_len - 1):
+            logits, cache = decode(params, cache, last[:, None], pos)
+            last = jnp.argmax(logits, -1).astype(jnp.int32)
+            outs.append(np.asarray(last))
+            pos = pos + 1
+        gen = np.stack(outs, axis=1)
+        print(f"cluster {c}: served {len(batch)} requests; "
+              f"generated [{len(batch)}, {gen.shape[1]}] tokens; "
+              f"first: {gen[0, :8].tolist()}")
+
+    print("\nall requests served with cluster-specialized models")
+
+
+if __name__ == "__main__":
+    main()

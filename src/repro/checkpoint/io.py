@@ -1,0 +1,73 @@
+"""Pytree checkpointing to .npz (offline container: no orbax/tensorstore).
+
+Paths are '/'-joined pytree keys; dataclass-free dicts/lists/tuples
+round-trip exactly. Works for model params, optimizer slots and full
+DL states.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        arr = np.asarray(tree)
+        if arr.dtype == np.dtype("bfloat16"):
+            # npz has no bf16: store the raw bits; dtype recorded in struct
+            arr = arr.view(np.uint16)
+        out[prefix[:-1]] = arr
+    return out
+
+
+def save(path: str, tree, meta: dict | None = None):
+    flat = _flatten(tree)
+    struct = jax.tree.map(lambda _: None, tree)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, __meta__=json.dumps(meta or {}),
+             __struct__=json.dumps(_structure(tree)), **flat)
+
+
+def _structure(tree):
+    if isinstance(tree, dict):
+        return {"__kind__": "dict",
+                "items": {k: _structure(v) for k, v in tree.items()}}
+    if isinstance(tree, (list, tuple)):
+        return {"__kind__": type(tree).__name__,
+                "items": [_structure(v) for v in tree]}
+    return {"__kind__": "leaf",
+            "dtype": str(np.asarray(tree).dtype)}
+
+
+def _rebuild(struct, flat, prefix=""):
+    kind = struct["__kind__"]
+    if kind == "dict":
+        return {k: _rebuild(v, flat, f"{prefix}{k}/")
+                for k, v in struct["items"].items()}
+    if kind in ("list", "tuple"):
+        seq = [_rebuild(v, flat, f"{prefix}{i}/")
+               for i, v in enumerate(struct["items"])]
+        return tuple(seq) if kind == "tuple" else seq
+    arr = flat[prefix[:-1]]
+    if struct.get("dtype") == "bfloat16":
+        arr = arr.view(np.dtype("bfloat16"))
+    return arr
+
+
+def load(path: str):
+    with np.load(path, allow_pickle=False) as z:
+        flat = {k: z[k] for k in z.files
+                if k not in ("__meta__", "__struct__")}
+        struct = json.loads(str(z["__struct__"]))
+        meta = json.loads(str(z["__meta__"]))
+    return _rebuild(struct, flat), meta

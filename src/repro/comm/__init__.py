@@ -1,0 +1,1 @@
+from .accounting import CommLog, gb  # noqa: F401

@@ -1,0 +1,38 @@
+"""Communication-volume accounting (paper Sec. V-E).
+
+The DL rounds report ``round_bytes``; this module accumulates them and
+answers 'how many GB to reach target accuracy X' — the paper's Fig. 7."""
+from __future__ import annotations
+
+import numpy as np
+
+
+class CommLog:
+    def __init__(self):
+        self.rounds: list[int] = []
+        self.bytes: list[float] = []
+        self.acc: list[float] = []
+
+    def record(self, rnd: int, round_bytes: float, acc: float | None = None):
+        total = (self.bytes[-1] if self.bytes else 0.0) + float(round_bytes)
+        self.rounds.append(int(rnd))
+        self.bytes.append(total)
+        if acc is not None:
+            self.acc.append(float(acc))
+        else:
+            self.acc.append(self.acc[-1] if self.acc else 0.0)
+
+    def bytes_to_target(self, target_acc: float) -> float | None:
+        """Cumulative bytes when accuracy first reaches target, else None."""
+        for b, a in zip(self.bytes, self.acc):
+            if a >= target_acc:
+                return b
+        return None
+
+    @property
+    def total_gb(self) -> float:
+        return (self.bytes[-1] / 1e9) if self.bytes else 0.0
+
+
+def gb(x: float) -> float:
+    return x / 1e9

@@ -1,0 +1,81 @@
+"""DAC baseline [Zec et al., 2022]: decentralized adaptive clustering —
+communication partners are sampled with probability derived from the
+(inverse) loss of each peer's model on the local data; mixing weights adapt
+to data similarity. Dynamic topology, full-model exchange."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .. import split, topology
+from ..bindings import Binding
+from ..state import BaselineState
+
+
+@dataclasses.dataclass(frozen=True)
+class DACConfig:
+    n_nodes: int
+    degree: int = 4
+    local_steps: int = 10
+    lr: float = 0.005
+    tau: float = 30.0  # similarity temperature (DAC paper's tau)
+
+
+def init_dac_extra(n: int):
+    """Pairwise similarity scores, updated every round."""
+    return {"sim": jnp.zeros((n, n), jnp.float32)}
+
+
+def dac_round(cfg: DACConfig, binding: Binding, state: BaselineState,
+              batches):
+    n = cfg.n_nodes
+    key, k_top = jax.random.split(state.rng)
+    sim = state.extra["sim"]
+
+    # --- sample neighbors: Gumbel-top-k over similarity logits ---
+    logits = cfg.tau * sim - 1e9 * jnp.eye(n)
+    gumbel = jax.random.gumbel(k_top, (n, n))
+    _, nbr = jax.lax.top_k(logits + gumbel, cfg.degree)      # [n, r]
+    adj = jnp.zeros((n, n)).at[jnp.arange(n)[:, None], nbr].set(1.0)
+    adj = jnp.maximum(adj, adj.T)  # symmetrize (push-pull exchange)
+
+    # --- similarity update: inverse loss of peer's model on local batch ---
+    first = jax.tree.map(lambda b: b[:, 0], batches)
+
+    def peer_losses(i):
+        my_batch = jax.tree.map(lambda b: b[i], first)
+
+        def loss_of(j):
+            pj = jax.tree.map(lambda p: p[j], state.params)
+            return binding.loss(pj, my_batch)
+
+        return jax.vmap(loss_of)(nbr[i])                     # [r]
+
+    l_peer = jax.vmap(peer_losses)(jnp.arange(n))            # [n, r]
+    new_sim = sim.at[jnp.arange(n)[:, None], nbr].set(
+        1.0 / jnp.maximum(l_peer, 1e-6))
+
+    # --- aggregate with similarity weights, then local train ---
+    w = topology.weighted_mixing(adj, jnp.maximum(new_sim, 1e-6))
+    params = jax.tree.map(
+        lambda p: jnp.einsum("ij,j...->i...", w.astype(p.dtype), p),
+        state.params)
+
+    def local(p, bh):
+        def step(pp, b):
+            g = jax.grad(binding.loss)(pp, b)
+            return jax.tree.map(
+                lambda ww, gg: (ww - cfg.lr * gg).astype(ww.dtype), pp, g), None
+        pp, _ = jax.lax.scan(step, p, bh)
+        return pp
+
+    params = jax.vmap(local)(params, batches)
+
+    model_bytes = split.tree_size_bytes(
+        jax.tree.map(lambda l: l[0], state.params))
+    info = {"round_bytes": jnp.asarray(
+        n * cfg.degree * model_bytes, jnp.float32)}
+    return BaselineState(params=params, extra={"sim": new_sim},
+                         round=state.round + 1, rng=key), info

@@ -1,0 +1,56 @@
+"""DEPRL baseline [Xiong et al., AAAI'24]: personalized DL with shared
+representations — the core is gossiped over a STATIC topology, the head is
+trained locally and NEVER shared (the paper observes this overfits and
+plateaus, Sec. V-B/V-D)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Any
+
+import jax
+import jax.numpy as jnp
+
+from .. import split, topology
+from ..bindings import Binding
+from ..state import BaselineState
+
+
+@dataclasses.dataclass(frozen=True)
+class DeprlConfig:
+    n_nodes: int
+    degree: int = 4
+    local_steps: int = 10
+    lr: float = 0.01
+
+
+def deprl_round(cfg: DeprlConfig, binding: Binding, state: BaselineState,
+                batches):
+    """state.params [n, ...] full models; only cores are mixed."""
+    adj = topology.ring(cfg.n_nodes, cfg.degree)
+    w = topology.mixing_matrix(adj)
+
+    def split_n(params):
+        return split.split_params(params, binding.head_keys)
+
+    cores, heads = jax.vmap(split_n)(state.params)
+    cores = jax.tree.map(
+        lambda c: jnp.einsum("ij,j...->i...", w.astype(c.dtype), c), cores)
+
+    def local(core, head, bh):
+        p = split.merge_params(core, head)
+
+        def step(pp, b):
+            g = jax.grad(binding.loss)(pp, b)
+            return jax.tree.map(
+                lambda ww, gg: (ww - cfg.lr * gg).astype(ww.dtype), pp, g), None
+
+        p, _ = jax.lax.scan(step, p, bh)
+        return p
+
+    params = jax.vmap(local)(cores, heads, batches)
+
+    core_bytes = split.tree_size_bytes(jax.tree.map(lambda l: l[0], cores))
+    info = {"round_bytes": jnp.asarray(
+        cfg.n_nodes * cfg.degree * core_bytes, jnp.float32)}
+    return BaselineState(params=params, extra=state.extra,
+                         round=state.round + 1, rng=state.rng), info

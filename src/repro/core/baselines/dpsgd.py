@@ -1,0 +1,46 @@
+"""D-PSGD baseline [Lian et al., NeurIPS'17]: static-topology decentralized
+SGD (paper Alg. 1 / Appendix B). Used for the Fig. 1 motivation experiment."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .. import split, topology
+from ..bindings import Binding
+from ..state import BaselineState
+
+
+@dataclasses.dataclass(frozen=True)
+class DpsgdConfig:
+    n_nodes: int
+    degree: int = 4
+    local_steps: int = 10
+    lr: float = 0.05
+
+
+def dpsgd_round(cfg: DpsgdConfig, binding: Binding, state: BaselineState,
+                batches):
+    adj = topology.ring(cfg.n_nodes, cfg.degree)
+    w = topology.mixing_matrix(adj)
+
+    def local(p, bh):
+        def step(pp, b):
+            g = jax.grad(binding.loss)(pp, b)
+            return jax.tree.map(
+                lambda ww, gg: (ww - cfg.lr * gg).astype(ww.dtype), pp, g), None
+        pp, _ = jax.lax.scan(step, p, bh)
+        return pp
+
+    # D-PSGD order: local train, then exchange+aggregate
+    params = jax.vmap(local)(state.params, batches)
+    params = jax.tree.map(
+        lambda p: jnp.einsum("ij,j...->i...", w.astype(p.dtype), p), params)
+
+    model_bytes = split.tree_size_bytes(
+        jax.tree.map(lambda l: l[0], state.params))
+    info = {"round_bytes": jnp.asarray(
+        cfg.n_nodes * cfg.degree * model_bytes, jnp.float32)}
+    return BaselineState(params=params, extra=state.extra,
+                         round=state.round + 1, rng=state.rng), info

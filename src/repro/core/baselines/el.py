@@ -1,0 +1,51 @@
+"""Epidemic Learning (EL) baseline [NeurIPS'23, de Vos et al.]:
+D-PSGD over a fresh random r-regular topology each round. This is the
+paper's primary baseline and the communication-cost reference point."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .. import split, topology
+from ..bindings import Binding
+from ..state import BaselineState
+
+
+@dataclasses.dataclass(frozen=True)
+class ELConfig:
+    n_nodes: int
+    degree: int = 4
+    local_steps: int = 10
+    lr: float = 0.05
+
+
+def _local_sgd(binding: Binding, params, batches_h, lr):
+    def step(p, b):
+        g = jax.grad(binding.loss)(p, b)
+        return jax.tree.map(lambda w, gg: (w - lr * gg).astype(w.dtype),
+                            p, g), None
+
+    params, _ = jax.lax.scan(step, params, batches_h)
+    return params
+
+
+def el_round(cfg: ELConfig, binding: Binding, state: BaselineState, batches):
+    """batches: pytree leading [n, H, B, ...]."""
+    key, sub = jax.random.split(state.rng)
+    adj = topology.random_regular(sub, cfg.n_nodes, cfg.degree)
+    w = topology.mixing_matrix(adj)
+
+    params = jax.tree.map(
+        lambda p: jnp.einsum("ij,j...->i...", w.astype(p.dtype), p),
+        state.params)
+    params = jax.vmap(lambda p, b: _local_sgd(binding, p, b, cfg.lr))(
+        params, batches)
+
+    model_bytes = split.tree_size_bytes(
+        jax.tree.map(lambda l: l[0], state.params))
+    info = {"round_bytes": jnp.asarray(
+        cfg.n_nodes * cfg.degree * model_bytes, jnp.float32)}
+    return BaselineState(params=params, extra=state.extra,
+                         round=state.round + 1, rng=key), info

@@ -1,0 +1,119 @@
+"""Model bindings: the uniform interface the DL algorithms train against.
+
+A binding exposes:
+    init(key)                  -> full param pytree (head keys included)
+    head_keys                  -> which top-level groups form the FACADE head
+    loss(params, batch)        -> scalar training loss (grads flow here)
+    features(core, batch)      -> core activations shared by the k heads
+    head_loss(head, feats, b)  -> candidate-head loss on cached core features
+
+The features/head_loss pair implements the paper's III-E optimization
+("store the output tokens of the model core and input these to each model
+head") — the core runs ONCE per round per node, not k times.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import api, cnn, layers, transformer, whisper
+from repro.models.base import CNNConfig, ModelConfig
+
+
+class Binding(NamedTuple):
+    cfg: Any
+    init: Callable
+    head_keys: tuple
+    loss: Callable          # (params, batch) -> scalar
+    features: Callable      # (core, batch) -> feats
+    head_loss: Callable     # (head, feats, batch) -> scalar
+
+
+def _untie_lm_head(cfg, params, key):
+    if "lm_head" not in params:
+        params = dict(params)
+        params["lm_head"] = layers.dense_init(
+            key, cfg.d_model, cfg.vocab_size, cfg.dt, scale=0.02)
+    return params
+
+
+def make_binding(cfg) -> Binding:
+    if isinstance(cfg, CNNConfig):
+        return _cnn_binding(cfg)
+    if cfg.encoder_layers > 0:
+        return _whisper_binding(cfg)
+    return _lm_binding(cfg)
+
+
+# --------------------------------------------------------------------------
+def _cnn_binding(cfg: CNNConfig) -> Binding:
+    hk = cnn.head_keys(cfg)
+
+    def loss(params, batch):
+        return cnn.loss_fn(cfg, params, batch)[0]
+
+    def features(core, batch):
+        return cnn.features(cfg, core, batch["x"])
+
+    def head_loss(head, feats, batch):
+        logits = cnn.head_apply(cfg, head, feats)
+        return layers.softmax_xent(logits, batch["y"])
+
+    return Binding(cfg, lambda k: cnn.init_params(cfg, k), hk, loss,
+                   features, head_loss)
+
+
+# --------------------------------------------------------------------------
+def _lm_binding(cfg: ModelConfig) -> Binding:
+    hk = ("final_norm", "lm_head")
+
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return _untie_lm_head(cfg, transformer.init_params(cfg, k1), k2)
+
+    def loss(params, batch):
+        return transformer.loss_fn(cfg, params, batch)[0]
+
+    def features(core, batch):
+        feats, _ = transformer.forward(cfg, core, batch["tokens"],
+                                       img_embeds=batch.get("img_embeds"),
+                                       apply_final_norm=False)
+        n_img = (0 if batch.get("img_embeds") is None
+                 else batch["img_embeds"].shape[1])
+        return feats[:, n_img:]
+
+    def head_loss(head, feats, batch):
+        h = layers.rms_norm(feats, head["final_norm"], cfg.norm_eps)
+        l, _ = transformer.chunked_ce(h, head["lm_head"], batch["labels"],
+                                      batch["mask"].astype(jnp.float32))
+        return l
+
+    return Binding(cfg, init, hk, loss, features, head_loss)
+
+
+# --------------------------------------------------------------------------
+def _whisper_binding(cfg: ModelConfig) -> Binding:
+    hk = ("final_norm", "lm_head")
+
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return _untie_lm_head(cfg, whisper.init_params(cfg, k1), k2)
+
+    def loss(params, batch):
+        return whisper.loss_fn(cfg, params, batch)[0]
+
+    def features(core, batch):
+        feats, _ = whisper.forward(cfg, core, batch["tokens"],
+                                   batch["frames"], apply_final_norm=False)
+        return feats
+
+    def head_loss(head, feats, batch):
+        h = layers.layer_norm(feats, head["final_norm"]["g"],
+                              head["final_norm"]["b"], cfg.norm_eps)
+        l, _ = transformer.chunked_ce(h, head["lm_head"], batch["labels"],
+                                      batch["mask"].astype(jnp.float32))
+        return l
+
+    return Binding(cfg, init, hk, loss, features, head_loss)

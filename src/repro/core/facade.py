@@ -1,0 +1,163 @@
+"""The FACADE algorithm (paper Sec. III-D), fully jit-compiled.
+
+One call to ``facade_round`` executes, for ALL nodes at once:
+
+    1. randomized r-regular topology                      (step 1)
+    2. core aggregation (Eq. 3) + cluster-wise head aggregation (Eq. 4)
+    3. cluster identification: argmin_j loss(core ∘ head_j)  (step 2c)
+    4. H local SGD steps on (core, selected head)            (step 2d)
+    5. write trained head into the selected slot; report cluster ID
+
+Node states are stacked (leading ``n`` axis); gossip is an einsum with the
+round's mixing matrix. In simulation mode the node axis lives on one device;
+in production mode it is sharded over the ``pod`` mesh axis and GSPMD turns
+the einsums into cross-pod collectives (see launch/shardings.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import split, topology
+from .bindings import Binding
+from .state import FacadeState
+
+
+@dataclasses.dataclass(frozen=True)
+class FacadeConfig:
+    n_nodes: int
+    k: int                    # number of cluster heads (paper hyperparam)
+    degree: int = 4           # topology degree r (paper: 4)
+    local_steps: int = 10     # H / tau (paper: 10; Flickr-Mammals 40)
+    lr: float = 0.01
+    warmup_rounds: int = 0    # App. F: initial EL-style shared-head rounds
+    head_jitter: float = 0.0
+
+
+# --------------------------------------------------------------------------
+def _mix_cores(w, cores):
+    return jax.tree.map(
+        lambda c: jnp.einsum("ij,j...->i...", w.astype(c.dtype), c), cores)
+
+
+def _aggregate_heads(adj, cluster_id, heads, k):
+    """Eq. 4: for each node i and cluster j, average the heads *sent* by
+    neighbors claiming cluster j together with i's own stored head j.
+
+    heads [n, k, ...]; sent head of node j' = heads[j', cid_j'].
+    """
+    n = adj.shape[0]
+    sent = jax.tree.map(
+        lambda h: h[jnp.arange(n), cluster_id], heads)      # [n, ...]
+    onehot = jax.nn.one_hot(cluster_id, k, dtype=jnp.float32)  # [n, k]
+    # cnt[i, c] = number of neighbors of i claiming cluster c
+    cnt = jnp.einsum("ij,jc->ic", adj, onehot)              # [n, k]
+    denom = 1.0 + cnt                                        # + own stored head
+
+    def agg(h_all, h_sent):
+        recv = jnp.einsum("ij,jc,j...->ic...", adj.astype(h_sent.dtype),
+                          onehot.astype(h_sent.dtype), h_sent)
+        d = denom.reshape(denom.shape + (1,) * (h_all.ndim - 2))
+        return ((h_all + recv) / d.astype(h_all.dtype)).astype(h_all.dtype)
+
+    return jax.tree.map(agg, heads, sent)
+
+
+def _select_heads(binding: Binding, cores, heads, batches):
+    """losses [n, k] via shared core features (paper III-E optimization)."""
+    def per_node(core, heads_k, batch):
+        feats = binding.features(core, batch)
+        return jax.vmap(lambda h: binding.head_loss(h, feats, batch))(heads_k)
+
+    return jax.vmap(per_node)(cores, heads, batches)        # [n, k]
+
+
+def _local_sgd(binding: Binding, params, batches_h, lr: float):
+    """H plain-SGD steps (paper step 2d). batches_h: leading [H, ...]."""
+    def step(p, batch):
+        g = jax.grad(binding.loss)(p, batch)
+        p = jax.tree.map(lambda w, gg: (w - lr * gg).astype(w.dtype), p, g)
+        return p, None
+
+    params, _ = jax.lax.scan(step, params, batches_h)
+    return params
+
+
+# --------------------------------------------------------------------------
+def facade_round(fcfg: FacadeConfig, binding: Binding, state: FacadeState,
+                 batches, warmup: bool = False):
+    """One synchronous FACADE round for all nodes.
+
+    batches: pytree with leading [n, H, B, ...] — per-node, per-local-step.
+    Returns (new_state, info dict with losses/selection/comm bytes).
+    """
+    n, k = fcfg.n_nodes, fcfg.k
+    key, subkey = jax.random.split(state.rng)
+    adj = topology.random_regular(subkey, n, fcfg.degree)
+    w = topology.mixing_matrix(adj)
+
+    # --- aggregation (steps 2a/2b) ---
+    cores = _mix_cores(w, state.cores)
+    heads = _aggregate_heads(adj, state.cluster_id, state.heads, k)
+
+    # --- cluster identification (step 2c) on the first local batch ---
+    first = jax.tree.map(lambda b: b[:, 0], batches)
+    losses = _select_heads(binding, cores, heads, first)     # [n, k]
+    new_cid = jnp.argmin(losses, axis=1).astype(jnp.int32)
+    if warmup:  # App. F: shared-head warmup trains head 0 everywhere
+        new_cid = jnp.zeros((n,), jnp.int32)
+
+    # --- local training (step 2d) ---
+    def train_node(core, heads_k, cid, node_batches):
+        head = split.select_head(heads_k, cid)
+        params = split.merge_params(core, head)
+        params = _local_sgd(binding, params, node_batches, fcfg.lr)
+        new_core, new_head = split.split_params(params, binding.head_keys)
+        if warmup:  # broadcast the trained head to every slot
+            heads_k = split.stack_heads(new_head, k)
+        else:
+            heads_k = split.set_head(heads_k, cid, new_head)
+        return new_core, heads_k
+
+    new_cores, new_heads = jax.vmap(train_node)(cores, heads, new_cid,
+                                                batches)
+
+    # --- communication accounting: each node pushes (core, head, cid) ---
+    core_bytes = split.tree_size_bytes(
+        jax.tree.map(lambda l: l[0], state.cores))
+    head_bytes = split.tree_size_bytes(
+        jax.tree.map(lambda l: l[0, 0], state.heads))
+    sent_bytes = n * fcfg.degree * (core_bytes + head_bytes + 4)
+
+    new_state = FacadeState(cores=new_cores, heads=new_heads,
+                            cluster_id=new_cid, round=state.round + 1,
+                            rng=key)
+    info = {
+        "selection_losses": losses,
+        "cluster_id": new_cid,
+        "round_bytes": jnp.asarray(sent_bytes, jnp.float32),
+    }
+    return new_state, info
+
+
+# --------------------------------------------------------------------------
+def final_allreduce(fcfg: FacadeConfig, state: FacadeState) -> FacadeState:
+    """Paper Sec. V-A: a final all-reduce where every node shares its model
+    with everyone and aggregates cluster-wise."""
+    n, k = fcfg.n_nodes, fcfg.k
+    adj = topology.fully_connected(n)
+    w = topology.mixing_matrix(adj)
+    cores = _mix_cores(w, state.cores)
+    heads = _aggregate_heads(adj, state.cluster_id, state.heads, k)
+    return state._replace(cores=cores, heads=heads)
+
+
+def node_models(state: FacadeState, binding: Binding):
+    """Merged per-node deployable models, stacked [n, ...]."""
+    def pick(core, heads_k, cid):
+        return split.merge_params(core, split.select_head(heads_k, cid))
+
+    return jax.vmap(pick)(state.cores, state.heads, state.cluster_id)

@@ -1,0 +1,172 @@
+"""Experiment runner: drives any DL algorithm (FACADE / EL / D-PSGD / DEPRL
+/ DAC) over a clustered dataset, evaluating per-cluster accuracy, fairness
+metrics and communication volume — the harness behind every paper table.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm import CommLog
+from repro.data import pipeline
+from repro.fairness import demographic_parity, equalized_odds, fair_accuracy
+from repro.models import cnn as cnn_mod
+
+from . import facade as facade_mod
+from . import split
+from .baselines import (DACConfig, DeprlConfig, DpsgdConfig, ELConfig,
+                        dac_round, deprl_round, dpsgd_round, el_round,
+                        init_dac_extra)
+from .bindings import Binding, make_binding
+from .state import (init_baseline_state, init_facade_state)
+
+
+@dataclasses.dataclass
+class RunResult:
+    algo: str
+    acc_per_cluster: list      # history: [(round, [acc_c0, acc_c1, ...])]
+    fair_acc: list             # [(round, fair_acc)]
+    dp: float                  # final demographic parity
+    eo: float                  # final equalized odds
+    comm: CommLog
+    cluster_history: list      # FACADE: [(round, cluster_id array)]
+    final_acc: list            # per-cluster accuracy at the end
+
+    def best_fair_acc(self) -> float:
+        return max(v for _, v in self.fair_acc) if self.fair_acc else 0.0
+
+
+# --------------------------------------------------------------------------
+def _eval_models(binding: Binding, models, node_cluster, test_x, test_y,
+                 batch: int = 256):
+    """models: stacked [n, ...]; evaluate each node on ITS cluster's test
+    set; returns (acc_per_cluster, preds/labels per cluster for DP/EO)."""
+    cfg = binding.cfg
+    k = len(test_x)
+    n = len(node_cluster)
+
+    @jax.jit
+    def predict(params, x):
+        logits = cnn_mod.forward(cfg, params, x)
+        return jnp.argmax(logits, -1)
+
+    accs, preds_c, labels_c = [], [], []
+    for c in range(k):
+        nodes = [i for i in range(n) if node_cluster[i] == c]
+        cluster_accs, cluster_preds = [], []
+        for i in nodes:
+            params_i = jax.tree.map(lambda l: l[i], models)
+            preds = []
+            for xb, yb in zip(pipeline.eval_batches(test_x[c], batch),
+                              pipeline.eval_batches(test_y[c], batch)):
+                preds.append(np.asarray(predict(params_i, xb)))
+            preds = np.concatenate(preds)
+            cluster_accs.append((preds == test_y[c]).mean())
+            cluster_preds.append(preds)
+        accs.append(float(np.mean(cluster_accs)))
+        # use the first node of the cluster as the DP/EO representative
+        preds_c.append(cluster_preds[0])
+        labels_c.append(test_y[c])
+    return accs, preds_c, labels_c
+
+
+# --------------------------------------------------------------------------
+def run_experiment(algo: str, cfg, dataset, *, rounds: int, k: int | None = None,
+                   degree: int = 4, local_steps: int = 10, batch_size: int = 8,
+                   lr: float = 0.05, eval_every: int = 20, seed: int = 0,
+                   warmup_rounds: int = 0, head_jitter: float = 0.0,
+                   target_acc: float | None = None,
+                   verbose: bool = False) -> RunResult:
+    """Run one (algorithm, dataset) experiment end to end (CNN models)."""
+    binding = make_binding(cfg)
+    n = dataset.n_nodes
+    k = k if k is not None else dataset.k
+    key = jax.random.PRNGKey(seed)
+    k_init, k_data = jax.random.split(key)
+
+    train_x = jnp.asarray(dataset.train_x)
+    train_y = jnp.asarray(dataset.train_y)
+
+    # --- algorithm setup ---
+    if algo == "facade":
+        fcfg = facade_mod.FacadeConfig(
+            n_nodes=n, k=k, degree=degree, local_steps=local_steps, lr=lr,
+            warmup_rounds=warmup_rounds, head_jitter=head_jitter)
+        state = init_facade_state(binding, k_init, n, k,
+                                  head_jitter=head_jitter)
+        round_warm = jax.jit(functools.partial(
+            facade_mod.facade_round, fcfg, binding, warmup=True))
+        round_main = jax.jit(functools.partial(
+            facade_mod.facade_round, fcfg, binding, warmup=False))
+
+        def do_round(state, batches, rnd):
+            fn = round_warm if rnd < warmup_rounds else round_main
+            return fn(state, batches)
+
+        def models_of(state):
+            return facade_mod.node_models(state, binding)
+    elif algo in ("el", "dpsgd", "deprl", "dac"):
+        cfg_cls = {"el": ELConfig, "dpsgd": DpsgdConfig,
+                   "deprl": DeprlConfig, "dac": DACConfig}[algo]
+        acfg = cfg_cls(n_nodes=n, degree=degree, local_steps=local_steps,
+                       lr=lr)
+        extra = init_dac_extra(n) if algo == "dac" else None
+        state = init_baseline_state(binding, k_init, n, extra=extra)
+        round_fn = {"el": el_round, "dpsgd": dpsgd_round,
+                    "deprl": deprl_round, "dac": dac_round}[algo]
+        stepper = jax.jit(functools.partial(round_fn, acfg, binding))
+
+        def do_round(state, batches, rnd):
+            return stepper(state, batches)
+
+        def models_of(state):
+            return state.params
+    else:
+        raise ValueError(f"unknown algorithm {algo!r}")
+
+    # --- training loop ---
+    comm = CommLog()
+    acc_hist, fair_hist, cluster_hist = [], [], []
+    dp = eo = 0.0
+    accs = []
+    for rnd in range(rounds):
+        k_data, k_b = jax.random.split(k_data)
+        batches = pipeline.sample_round_batches(
+            k_b, train_x, train_y, local_steps, batch_size)
+        state, info = do_round(state, batches, rnd)
+
+        last_round = rnd == rounds - 1
+        if last_round and algo == "facade":
+            state = facade_mod.final_allreduce(
+                facade_mod.FacadeConfig(n_nodes=n, k=k, degree=degree), state)
+        if (rnd + 1) % eval_every == 0 or last_round:
+            models = models_of(state)
+            accs, preds_c, labels_c = _eval_models(
+                binding, models, dataset.node_cluster,
+                dataset.test_x, dataset.test_y)
+            acc_hist.append((rnd + 1, accs))
+            fa = fair_accuracy(accs)
+            fair_hist.append((rnd + 1, fa))
+            dp = demographic_parity(preds_c, binding.cfg.n_classes)
+            eo = equalized_odds(preds_c, labels_c, binding.cfg.n_classes)
+            mean_acc = float(np.mean(
+                [a * (np.asarray(dataset.node_cluster) == c).sum()
+                 for c, a in enumerate(accs)]) * len(accs) / n)
+            comm.record(rnd + 1, float(info["round_bytes"]), mean_acc)
+            if verbose:
+                print(f"  [{algo}] round {rnd+1}: acc={accs} fair={fa:.3f}")
+            if target_acc is not None and mean_acc >= target_acc:
+                break
+        else:
+            comm.record(rnd + 1, float(info["round_bytes"]))
+        if algo == "facade":
+            cluster_hist.append((rnd + 1, np.asarray(state.cluster_id)))
+
+    return RunResult(algo=algo, acc_per_cluster=acc_hist, fair_acc=fair_hist,
+                     dp=dp, eo=eo, comm=comm, cluster_history=cluster_hist,
+                     final_acc=accs)

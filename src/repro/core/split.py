@@ -1,0 +1,59 @@
+"""Core/head parameter split (paper Sec. III-A).
+
+The model pytree is split by *top-level key*: the config names which groups
+form the FACADE head (e.g. ``("final_norm", "lm_head")`` for LMs,
+``("block2", "block3", "fc")`` for ResNet8). Everything else is the shared
+core. Heads are replicated k times with independent values (one per
+cluster); cores stay single.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def split_params(params: dict, head_keys: tuple):
+    head = {k: params[k] for k in head_keys if k in params}
+    core = {k: v for k, v in params.items() if k not in head}
+    return core, head
+
+
+def merge_params(core: dict, head: dict) -> dict:
+    out = dict(core)
+    out.update(head)
+    return out
+
+
+def stack_heads(head: dict, k: int, key=None, jitter: float = 0.0):
+    """Replicate a head pytree k times -> leading axis k. Optional jitter
+    decorrelates the initial heads (Appendix F notes identical-init heads
+    help early settling; jitter=0 reproduces that 'shared init' strategy)."""
+    def rep(leaf):
+        return jnp.broadcast_to(leaf[None], (k,) + leaf.shape).copy()
+
+    stacked = jax.tree.map(rep, head)
+    if jitter > 0.0 and key is not None:
+        leaves, treedef = jax.tree.flatten(stacked)
+        keys = jax.random.split(key, len(leaves))
+        leaves = [l + jitter * jax.random.normal(kk, l.shape, l.dtype)
+                  for l, kk in zip(leaves, keys)]
+        stacked = jax.tree.unflatten(treedef, leaves)
+    return stacked
+
+
+def select_head(stacked_head: dict, idx):
+    """Pick head ``idx`` (traced int) from the k-stacked head pytree."""
+    return jax.tree.map(lambda l: jax.lax.dynamic_index_in_dim(
+        l, idx, axis=0, keepdims=False), stacked_head)
+
+
+def set_head(stacked_head: dict, idx, head: dict):
+    """Write ``head`` into slot ``idx`` of the k-stacked head pytree."""
+    return jax.tree.map(
+        lambda s, h: jax.lax.dynamic_update_index_in_dim(
+            s, h.astype(s.dtype), idx, axis=0),
+        stacked_head, head)
+
+
+def tree_size_bytes(tree) -> int:
+    return sum(int(l.size * l.dtype.itemsize) for l in jax.tree.leaves(tree))

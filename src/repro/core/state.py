@@ -1,0 +1,68 @@
+"""Stacked decentralized-learning state.
+
+Every node's parameters live in one pytree with a leading ``node`` axis —
+the representation that makes gossip an einsum (and, with the node axis
+sharded on the ``pod`` mesh axis, makes cross-pod collectives appear from
+GSPMD). Heads carry an extra leading ``k`` axis (one slot per cluster).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import split
+
+
+class FacadeState(NamedTuple):
+    cores: Any           # pytree, leading [n, ...]
+    heads: Any           # pytree, leading [n, k, ...]
+    cluster_id: Any      # [n] int32 — cluster ID reported last round
+    round: Any           # scalar int32
+    rng: Any             # PRNG key driving topology randomness
+
+
+class BaselineState(NamedTuple):
+    params: Any          # pytree, leading [n, ...] (full model)
+    extra: Any           # algorithm-specific (e.g. DAC weights [n, n])
+    round: Any
+    rng: Any
+
+
+def _stack_n(tree, n):
+    return jax.tree.map(
+        lambda l: jnp.broadcast_to(l[None], (n,) + l.shape).copy(), tree)
+
+
+def init_facade_state(binding, key, n: int, k: int,
+                      head_jitter: float = 0.0) -> FacadeState:
+    """All nodes start from the same init (paper: 'initializing its local
+    model in the same way'); the k heads share weights at round 0 unless
+    ``head_jitter`` decorrelates them."""
+    k_init, k_jit, k_rng = jax.random.split(key, 3)
+    params = binding.init(k_init)
+    core, head = split.split_params(params, binding.head_keys)
+    heads_k = split.stack_heads(head, k, key=k_jit, jitter=head_jitter)
+    return FacadeState(
+        cores=_stack_n(core, n),
+        heads=_stack_n(heads_k, n),
+        cluster_id=jnp.zeros((n,), jnp.int32),
+        round=jnp.zeros((), jnp.int32),
+        rng=k_rng,
+    )
+
+
+def init_baseline_state(binding, key, n: int, extra=None) -> BaselineState:
+    k_init, k_rng = jax.random.split(key)
+    params = binding.init(k_init)
+    return BaselineState(params=_stack_n(params, n), extra=extra,
+                         round=jnp.zeros((), jnp.int32), rng=k_rng)
+
+
+def node_model(state: FacadeState, i: int):
+    """Merged (core, selected head) of node i — its deployable model."""
+    core = jax.tree.map(lambda l: l[i], state.cores)
+    heads = jax.tree.map(lambda l: l[i], state.heads)
+    head = split.select_head(heads, state.cluster_id[i])
+    return split.merge_params(core, head)

@@ -1,0 +1,5 @@
+from .pipeline import (eval_batches, sample_round_batches,  # noqa: F401
+                       sample_round_token_batches)
+from .synthetic import (ClusteredDataset, SynthSpec, apply_transform,  # noqa: F401
+                        make_clustered_data)
+from .tokens import TokenSpec, lm_batch, make_clustered_tokens  # noqa: F401

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU):
+
+  * flash_attention — blocked causal GQA attention (train/prefill hot spot)
+  * head_select     — FACADE step-2c fused k-head cross-entropy
+  * rwkv6           — wkv recurrence with VMEM-resident state
+"""
+from . import flash_attention, head_select, rwkv6  # noqa: F401

@@ -1,0 +1,119 @@
+"""Blocked causal GQA flash attention — Pallas TPU kernel.
+
+TPU adaptation notes:
+  * grid = (batch*q_heads, q_blocks, kv_blocks); kv dimension is the
+    sequential ("arbitrary") axis, so the fp32 accumulator / running max /
+    running sum live in VMEM scratch across kv steps (online softmax).
+  * BlockSpec tiles are (block_q, head_dim) / (block_kv, head_dim) with
+    head_dim a multiple of 128-friendly MXU shapes (64/128 typical).
+  * GQA is handled in the kv index_map (q head h reads kv head h // group)
+    — no repeated k/v materialization in HBM.
+  * causal + sliding-window masking by absolute positions derived from
+    program ids; fully-masked kv blocks still iterate (grid is static) but
+    write nothing — the cost model in benchmarks accounts for this.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                 scale: float, block_q: int, block_kv: int, n_kv: int,
+                 causal: bool, window: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale             # [bq, d]
+    k = k_ref[0].astype(jnp.float32)                     # [bkv, d]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [bq,bkv]
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_kv), 0)
+    k_pos = ki * block_kv + jax.lax.broadcasted_iota(jnp.int32,
+                                                     (block_q, block_kv), 1)
+    mask = jnp.ones((block_q, block_kv), jnp.bool_)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[0]                                    # [bq, 1]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                               # [bq, bkv]
+    alpha = jnp.exp(m_prev - m_new)                      # [bq, 1]
+
+    l_ref[0] = l_ref[0] * alpha + p.sum(axis=1, keepdims=True)
+    v = v_ref[0].astype(jnp.float32)
+    acc_ref[0] = acc_ref[0] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[0] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _done():
+        l = jnp.maximum(l_ref[0], 1e-30)
+        o_ref[0] = (acc_ref[0] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale: float | None = None, block_q: int = 128,
+                    block_kv: int = 128, interpret: bool = False):
+    """q [B,Hq,S,D], k/v [B,Hkv,S,D] -> [B,Hq,S,D]."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    block_q = min(block_q, s)
+    block_kv = min(block_kv, s)
+    n_q, n_kv = s // block_q, s // block_kv
+
+    qr = q.reshape(b * hq, s, d)
+    kr = k.reshape(b * hkv, s, d)
+    vr = v.reshape(b * hkv, s, d)
+
+    def q_map(bh, qi, ki):
+        return (bh, qi, 0)
+
+    def kv_map(bh, qi, ki):
+        # bh = b * hq + h  ->  kv index = b * hkv + h // g
+        return ((bh // hq) * hkv + (bh % hq) // g, ki, 0)
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, block_q=block_q, block_kv=block_kv,
+        n_kv=n_kv, causal=causal, window=window)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * hq, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), q_map),
+            pl.BlockSpec((1, block_kv, d), kv_map),
+            pl.BlockSpec((1, block_kv, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), q_map),
+        out_shape=jax.ShapeDtypeStruct((b * hq, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, block_q, d), jnp.float32),
+            pltpu.VMEM((1, block_q, 1), jnp.float32),
+            pltpu.VMEM((1, block_q, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, hq, s, d)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the blocked causal GQA attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  scale: float | None = None):
+    """q [B,Hq,S,D], k/v [B,Hkv,S,D] -> [B,Hq,S,D]. fp32 softmax."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+
+    qg = q.reshape(b, hkv, g, s, d)
+    scores = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(s)
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= pos[:, None] >= pos[None, :]
+    if window > 0:
+        mask &= (pos[:, None] - pos[None, :]) < window
+    scores = jnp.where(mask, scores.astype(jnp.float32), -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", w.astype(v.dtype), v)
+    return out.reshape(b, hq, s, d)

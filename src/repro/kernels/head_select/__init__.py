@@ -1,0 +1,3 @@
+from .kernel import head_select_losses  # noqa: F401
+from .ops import facade_head_losses  # noqa: F401
+from .ref import head_losses_ref  # noqa: F401

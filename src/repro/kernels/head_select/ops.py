@@ -1,0 +1,57 @@
+"""Public wrapper: FACADE step-2c head selection over cached core features."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import head_select_losses
+from .ref import head_losses_ref
+
+
+def _pad_to(x, m: int, axis: int, fill=0):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, pad)
+    return jnp.pad(x, pads, constant_values=fill)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_v",
+                                             "interpret", "use_kernel"))
+def facade_head_losses(features, heads, labels, mask=None, *,
+                       block_t: int = 128, block_v: int = 512,
+                       interpret: bool = False, use_kernel: bool = True):
+    """features [B,S,D] or [T,D]; heads [K,D,V]; labels/mask [B,S] or [T].
+    Returns mean NLL per head [K] — argmin of this is the FACADE cluster ID.
+    """
+    if features.ndim == 3:
+        features = features.reshape(-1, features.shape[-1])
+        labels = labels.reshape(-1)
+        if mask is not None:
+            mask = mask.reshape(-1)
+    labels = jnp.where((mask > 0) if mask is not None else True,
+                       labels, -1).astype(jnp.int32)
+    denom = jnp.maximum((labels >= 0).sum(), 1).astype(jnp.float32)
+
+    if not use_kernel:
+        return head_losses_ref(features, heads, labels)
+
+    f = _pad_to(features, block_t, 0)
+    lab = _pad_to(labels, block_t, 0, fill=-1)
+    h = _pad_to(heads, block_v, 2)  # padded vocab cols: logits can only
+    # lower the lse by adding exp(w@f)=... zero-weight cols give logit 0;
+    # mask them to -inf by padding with large negative bias via labels trick
+    # is unnecessary: zero columns add exp(0 - m) terms. To stay exact we
+    # require V % block_v == 0 from callers; assert here.
+    assert heads.shape[2] % block_v == 0 or heads.shape[2] < block_v, (
+        "vocab must divide block_v (or be smaller); zero-padding would "
+        "perturb the log-sum-exp")
+    if heads.shape[2] < block_v:
+        block_v = heads.shape[2]
+        h = heads
+    sums = head_select_losses(f, h, lab, block_t=block_t, block_v=block_v,
+                              interpret=interpret)
+    return sums / denom

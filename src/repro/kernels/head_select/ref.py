@@ -1,0 +1,26 @@
+"""Oracle for the fused k-head cross-entropy (FACADE head selection)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def head_losses_ref(features, heads, labels, mask=None):
+    """features [T,D], heads [K,D,V], labels [T] -> [K] mean NLL per head.
+
+    mask [T] (1=count); labels < 0 are also excluded.
+    """
+    t = features.shape[0]
+    valid = labels >= 0
+    if mask is not None:
+        valid &= mask > 0
+    denom = jnp.maximum(valid.sum(), 1)
+    labs = jnp.maximum(labels, 0)
+
+    def one(w):
+        logits = (features.astype(jnp.float32) @ w.astype(jnp.float32))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labs[:, None], axis=-1)[:, 0]
+        return jnp.where(valid, lse - gold, 0.0).sum() / denom
+
+    return jax.vmap(one)(heads)

@@ -1,0 +1,20 @@
+"""Jit'd wrapper + backend dispatch for the RWKV6 wkv kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import wkv_kernel
+from .ref import wkv_ref
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def wkv_op(r, k, v, w, u, *, block_t: int = 64, interpret: bool = False):
+    return wkv_kernel(r, k, v, w, u, block_t=block_t, interpret=interpret)
+
+
+def wkv_auto(r, k, v, w, u):
+    if jax.default_backend() == "tpu":
+        return wkv_op(r, k, v, w, u)
+    return wkv_ref(r, k, v, w, u)

@@ -1,0 +1,2 @@
+"""Oracle for the RWKV6 wkv recurrence — delegates to the model's scan."""
+from repro.models.rwkv import wkv_scan as wkv_ref  # noqa: F401

@@ -1,0 +1,7 @@
+"""Launchers: production mesh, sharding rules, dry-run, train/serve CLIs.
+
+NOTE: ``dryrun`` must be run as a script/module (it pins
+``xla_force_host_platform_device_count=512`` before importing jax); do not
+import it from here.
+"""
+from .mesh import HW, make_debug_mesh, make_production_mesh  # noqa: F401

@@ -1,0 +1,44 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (not module constants) so importing this module never
+touches jax device state — required because the dry-run pins
+``xla_force_host_platform_device_count=512`` before first jax init while
+tests/benches must keep seeing 1 device.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """single pod: (data=16, model=16) = 256 chips (v5e pod);
+    multi-pod:  (pod=2, data=16, model=16) = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, have {len(devices)}; "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "BEFORE importing jax (dryrun.py does this)")
+    return jax.sharding.Mesh(
+        np.asarray(devices[:need]).reshape(shape), axes)
+
+
+def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
+    """Tiny mesh for tests (run in a subprocess with forced device count)."""
+    need = math.prod(shape)
+    return jax.sharding.Mesh(
+        np.asarray(jax.devices()[:need]).reshape(shape), axes)
+
+
+HW = {
+    # TPU v5e per chip
+    "peak_flops_bf16": 197e12,   # FLOP/s
+    "hbm_bw": 819e9,             # bytes/s
+    "ici_bw": 50e9,              # bytes/s/link
+}

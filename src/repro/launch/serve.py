@@ -1,0 +1,101 @@
+"""Batched serving driver: prefill a request batch, then decode N tokens.
+
+Runs the SMOKE variant of any assigned architecture on CPU (the full
+configs are exercised by the dry-run). Demonstrates the production decode
+path: prefill -> KV cache -> serve_step (one token per call), with
+continuous batching over a request queue.
+
+    python -m repro.launch.serve --arch llama3.2-1b --requests 8 \\
+        --prompt-len 64 --gen-len 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs as _configs  # noqa: F401
+from repro.models import api, transformer
+from repro.models.base import get_config, list_archs
+
+
+def make_requests(rng, n, prompt_len, vocab):
+    return [rng.integers(1, vocab, size=(rng.integers(
+        prompt_len // 2, prompt_len + 1),)).astype(np.int32)
+        for _ in range(n)]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="llama3.2-1b", choices=list_archs())
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen-len", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=True)
+    if cfg.encoder_layers > 0:
+        raise SystemExit("enc-dec serving: use examples/serve_batched.py "
+                         "(audio frontend is stubbed)")
+    key = jax.random.PRNGKey(args.seed)
+    params = api.init_params(cfg, key)
+    rng = np.random.default_rng(args.seed)
+    queue = make_requests(rng, args.requests, args.prompt_len, cfg.vocab_size)
+
+    pad_to = args.prompt_len
+    cache_len = transformer.cache_physical_len(
+        cfg, args.prompt_len + args.gen_len)
+
+    @jax.jit
+    def prefill_fn(params, tokens):
+        return transformer.prefill(cfg, params, tokens,
+                                   cache_extra=cache_len - tokens.shape[1])
+
+    @jax.jit
+    def decode_fn(params, cache, tokens, pos):
+        return transformer.decode_step(cfg, params, cache, tokens, pos)
+
+    t0 = time.time()
+    done = 0
+    while queue:
+        batch_reqs = [queue.pop(0) for _ in range(min(args.batch, len(queue)))]
+        b = len(batch_reqs)
+        lens = np.array([len(r) for r in batch_reqs], np.int32)
+        toks = np.zeros((b, pad_to), np.int32)
+        for i, r in enumerate(batch_reqs):
+            toks[i, :len(r)] = r
+
+        logits, cache = prefill_fn(params, jnp.asarray(toks))
+        out_tokens = np.zeros((b, args.gen_len), np.int32)
+        pos = jnp.asarray(lens)  # next position per request
+        # greedy (or sampled) continuation
+        last = jnp.argmax(logits, -1).astype(jnp.int32)
+        for t in range(args.gen_len):
+            out_tokens[:, t] = np.asarray(last)
+            logits, cache = decode_fn(params, cache, last[:, None], pos)
+            if args.temperature > 0:
+                key_t = jax.random.fold_in(key, t)
+                last = jax.random.categorical(
+                    key_t, logits / args.temperature).astype(jnp.int32)
+            else:
+                last = jnp.argmax(logits, -1).astype(jnp.int32)
+            pos = pos + 1
+        done += b
+        print(f"batch of {b}: prompts {lens.tolist()} -> "
+              f"{args.gen_len} tokens each "
+              f"(first req head: {out_tokens[0, :8].tolist()})", flush=True)
+
+    dt = time.time() - t0
+    total_tok = done * args.gen_len
+    print(f"served {done} requests, {total_tok} tokens "
+          f"in {dt:.1f}s = {total_tok / dt:.1f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,210 @@
+"""Parameter / activation partition rules.
+
+One generic rule engine covers all 10 architectures: leaf paths are matched
+against patterns that name a *preferred* layout; every axis placement is
+divisibility-checked against the mesh and dropped (or moved) when it does
+not divide — so odd head counts (minicpm3's 40 heads) or odd vocabs (73448)
+degrade gracefully instead of failing to lower.
+
+Layout philosophy (MaxText-style 2D):
+  * ``model`` axis — tensor parallel: column-parallel in-projections
+    (wq/wk/wv/w_gate/w_up, MoE expert axis when divisible), row-parallel
+    out-projections (wo/w_down).
+  * ``data`` axis — batch for activations; with ``fsdp=True`` also shards
+    the largest remaining dim of every big weight (ZeRO-3) — required for
+    grok-1-314b to fit 16 GB/chip.
+  * leading ``layers`` scan axis and the FACADE ``node`` axis are never
+    model-sharded; the node axis maps to ``pod``.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# pattern -> layout over the TRAILING dims (applied right-aligned).
+# "col": last dim on model; "row": second-to-last dim on model;
+# "expert": dim -3 on model (MoE stacks), falling back to "col".
+_RULES = [
+    (r"(^|/)moe/router$", "rep"),
+    (r"(^|/)moe/w_(gate|up)$", "expert_col"),
+    (r"(^|/)moe/w_down$", "expert_row"),
+    (r"(^|/)(attn|self_attn|cross_attn)/wo$", "row"),
+    (r"(^|/)(attn|self_attn|cross_attn)/w", "col"),
+    (r"(^|/)(mlp|shared|channel_mix|time_mix)/w_(down|out|v)$", "row"),
+    (r"(^|/)(mlp|shared|channel_mix|time_mix)/w", "col"),
+    (r"(^|/)ssm/w_(in|xproj)$", "col"),
+    (r"(^|/)ssm/w_out$", "row"),
+    (r"(^|/)embed$", "col"),       # [V, D] -> shard D
+    (r"(^|/)lm_head$", "col"),     # [D, V] -> shard V
+    (r"(^|/)pos_embed$", "rep"),
+]
+
+_BIG_LEAF = 1 << 20  # fsdp only bothers with leaves > 1M elements
+
+
+def _path_str(path) -> str:
+    parts = []
+    for pp in path:
+        if hasattr(pp, "key"):
+            parts.append(str(pp.key))
+        elif hasattr(pp, "idx"):
+            parts.append(str(pp.idx))
+    return "/".join(parts)
+
+
+def _divisible(shape, dim, size) -> bool:
+    return 0 <= dim < len(shape) and shape[dim] % size == 0 and shape[dim] >= size
+
+
+def leaf_spec(path_str: str, shape, mesh: Mesh, *, fsdp: bool = True,
+              skip_leading: int = 0, extra_leading: tuple = ()) -> P:
+    """Partition spec for one leaf. ``skip_leading`` protects scan/stack
+    axes; ``extra_leading`` are specs for those axes (e.g. node -> 'pod')."""
+    ndim = len(shape)
+    model = mesh.shape.get("model", 1)
+    data = mesh.shape.get("data", 1)
+    spec: list = [None] * ndim
+    for i, ax in enumerate(extra_leading):
+        if ax is not None and _divisible(shape, i, mesh.shape.get(ax, 1)):
+            spec[i] = ax
+
+    layout = "rep"
+    for pat, lay in _RULES:
+        if re.search(pat, path_str):
+            layout = lay
+            break
+
+    lo = skip_leading + len(extra_leading)
+
+    def place_model(dim):
+        if _divisible(shape, dim, model) and spec[dim] is None:
+            spec[dim] = "model"
+            return True
+        return False
+
+    if layout in ("col", "expert_col"):
+        if layout == "expert_col" and ndim - 3 >= lo and _divisible(
+                shape, ndim - 3, model):
+            spec[ndim - 3] = "model"        # expert parallelism
+        elif not place_model(ndim - 1):
+            place_model(ndim - 2)
+    elif layout in ("row", "expert_row"):
+        if layout == "expert_row" and ndim - 3 >= lo and _divisible(
+                shape, ndim - 3, model):
+            spec[ndim - 3] = "model"
+        elif ndim - 2 >= lo and not place_model(ndim - 2):
+            place_model(ndim - 1)
+
+    if fsdp and data > 1 and int(np.prod(shape)) > _BIG_LEAF:
+        # ZeRO-3: shard the largest remaining dim over (pod,)data —
+        # including the pod axis halves per-device param/grad/slot bytes
+        # on the multi-pod mesh (grok-1 would not fit otherwise).
+        # Axes already placed (e.g. 'pod' on the FACADE node dim) are
+        # excluded: a mesh axis may appear at most once per spec.
+        used = {a for sp in spec if sp is not None
+                for a in (sp if isinstance(sp, tuple) else (sp,))}
+        fs_axes = tuple(a for a in ("pod", "data")
+                        if mesh.shape.get(a, 1) > 1 and a not in used)
+        fs_size = int(np.prod([mesh.shape[a] for a in fs_axes]))
+        cands = sorted(range(lo, ndim), key=lambda d: -shape[d])
+        for d in cands:
+            if spec[d] is None and _divisible(shape, d, fs_size):
+                spec[d] = fs_axes if len(fs_axes) > 1 else fs_axes[0]
+                break
+        else:  # fall back to data-only when the pod product doesn't divide
+            for d in cands:
+                if spec[d] is None and _divisible(shape, d, data):
+                    spec[d] = "data"
+                    break
+    return P(*spec)
+
+
+def param_specs(params_shape, mesh: Mesh, *, fsdp: bool = True,
+                node_axis: bool = False):
+    """Pytree of PartitionSpecs for a (possibly node-stacked) param tree.
+
+    node_axis=True: leading dim of every leaf is the FACADE node axis
+    (-> 'pod' when present in the mesh)."""
+    extra = (("pod" if "pod" in mesh.shape else None),) if node_axis else ()
+
+    def assign(path, leaf):
+        ps = _path_str(path)
+        skip = 1 if re.search(r"(^|/)layers(/|$)", ps) else 0
+        if node_axis and re.match(r"^heads/", ps):
+            pass  # head stacks get an extra k axis; handled by caller
+        return leaf_spec(ps, leaf.shape, mesh, fsdp=fsdp,
+                         skip_leading=skip, extra_leading=extra)
+
+    return jax.tree_util.tree_map_with_path(assign, params_shape)
+
+
+def batch_specs(batch_shape, mesh: Mesh, *, node_axis: bool = False):
+    """Activations: batch dim on ('pod','data') [plain] or node on 'pod' +
+    batch on 'data' [FACADE]. Falls back to replication when not divisible."""
+    data_axes = []
+    if not node_axis and "pod" in mesh.shape:
+        data_axes.append("pod")
+    data_axes.append("data")
+    dsize = int(np.prod([mesh.shape[a] for a in data_axes]))
+
+    def assign(path, leaf):
+        shape = leaf.shape
+        spec: list = [None] * len(shape)
+        i = 0
+        if node_axis:
+            if "pod" in mesh.shape and _divisible(shape, 0,
+                                                  mesh.shape["pod"]):
+                spec[0] = "pod"
+            i = 1
+        # find first dim >= i divisible by the data axes product = batch
+        for d in range(i, len(shape)):
+            if _divisible(shape, d, dsize):
+                spec[d] = tuple(data_axes) if len(data_axes) > 1 else data_axes[0]
+                break
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(assign, batch_shape)
+
+
+def cache_specs(cache_shape, mesh: Mesh):
+    """KV caches: batch on 'data' when divisible, else slot/seq dim on
+    'data' (long_500k: batch=1); kv-head dims on 'model' when divisible,
+    else the slots dim takes 'model' (sequence-sharded cache — kv-head
+    counts like 5 or 8 rarely divide a 16-way model axis, but 32k slots
+    always do)."""
+    data = mesh.shape.get("data", 1)
+    model = mesh.shape.get("model", 1)
+
+    def assign(path, leaf):
+        shape = leaf.shape  # [L, B, slots, ...] or [L, B, ...]
+        spec: list = [None] * len(shape)
+        if len(shape) >= 2 and _divisible(shape, 1, data):
+            spec[1] = "data"
+        elif len(shape) >= 3 and _divisible(shape, 2, data):
+            spec[2] = "data"
+        # head dim (gqa k/v: [L,B,S,H,hd]) on model; fallback: slots dim
+        if len(shape) >= 5 and _divisible(shape, 3, model):
+            spec[3] = "model"
+        elif (len(shape) >= 4 and spec[2] is None
+                and _divisible(shape, 2, model)):
+            spec[2] = "model"
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(assign, cache_shape)
+
+
+def opt_specs(opt_sds, pspecs):
+    """Optimizer slots mirror the param specs; counters are replicated."""
+    out = {}
+    for k, v in opt_sds.items():
+        out[k] = P() if k == "count" else pspecs
+    return out
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

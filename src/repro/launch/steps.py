@@ -1,0 +1,269 @@
+"""Step builders + abstract input specs for every (arch x input-shape) pair.
+
+Three step kinds (per the assignment):
+  * train_4k      -> train_step(params, opt_state, batch)
+  * prefill_32k   -> prefill_step(params, batch)      (logits + filled cache)
+  * decode_32k /
+    long_500k     -> serve_step(params, cache, tokens, pos)  (1 new token)
+
+plus the FACADE production step (the paper's technique across pods):
+  * facade_step(state, batches) — 2 pod-scale nodes gossiping cluster heads.
+
+``input_specs`` returns ShapeDtypeStructs only — nothing is allocated; the
+dry-run lowers and compiles against them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro import optim
+from repro.configs import (INPUT_SHAPES, LONG_CTX_SKIP, LONG_CTX_SWA_ARCHS,
+                           LONG_CTX_SWA_WINDOW)
+from repro.core import facade as facade_mod
+from repro.core import make_binding, split
+from repro.core.state import FacadeState
+from repro.models import api, get_config, hooks, transformer, whisper
+from repro.models.base import ModelConfig
+
+from . import shardings
+
+
+# --------------------------------------------------------------------------
+def resolve_config(arch_id: str, shape_name: str,
+                   unroll: bool = False) -> ModelConfig:
+    cfg = get_config(arch_id)
+    if shape_name == "long_500k" and arch_id in LONG_CTX_SWA_ARCHS:
+        cfg = cfg.replace(sliding_window=LONG_CTX_SWA_WINDOW)
+    if unroll:
+        # exact HLO cost accounting: unroll the layer scan so cost_analysis
+        # counts every layer (a while body is otherwise counted once)
+        cfg = cfg.replace(scan_unroll=max(cfg.n_layers, cfg.encoder_layers))
+    return cfg
+
+
+def is_supported(arch_id: str, shape_name: str) -> bool:
+    if shape_name == "long_500k" and arch_id in LONG_CTX_SKIP:
+        return False
+    return True
+
+
+def make_optimizer(arch_id: str, cfg: ModelConfig):
+    """grok-1: bf16 momentum slots (314B params must fit 16GB/chip HBM —
+    DESIGN.md §7); everything else AdamW fp32 slots."""
+    if arch_id == "grok-1-314b":
+        return optim.momentum(1e-4, slot_dtype=jnp.bfloat16)
+    return optim.adamw(3e-4)
+
+
+# --------------------------------------------------------------------------
+def _lm_batch_sds(cfg: ModelConfig, b: int, s: int):
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "mask": jax.ShapeDtypeStruct((b, s), jnp.float32),
+    }
+    if cfg.arch_type == "vlm":
+        # image tokens are part of the sequence budget
+        s_txt = s - cfg.n_image_tokens
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((b, s_txt), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s_txt), jnp.int32),
+            "mask": jax.ShapeDtypeStruct((b, s_txt), jnp.float32),
+            "img_embeds": jax.ShapeDtypeStruct(
+                (b, cfg.n_image_tokens, cfg.d_model), cfg.dt),
+        }
+    if cfg.encoder_layers > 0:
+        s_dec = min(s, cfg.max_decoder_len)
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((b, s_dec), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s_dec), jnp.int32),
+            "mask": jax.ShapeDtypeStruct((b, s_dec), jnp.float32),
+            "frames": jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq, cfg.d_model), cfg.dt),
+        }
+    return batch
+
+
+def _abstract_params(cfg, init_fn):
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(init_fn, key)
+
+
+@dataclasses.dataclass
+class DryRunCase:
+    arch: str
+    shape: str
+    step_fn: Callable
+    args_sds: tuple
+    in_shardings: tuple
+    donate: tuple = ()
+
+
+# --------------------------------------------------------------------------
+def build_case(arch_id: str, shape_name: str, mesh, *, remat: bool = True,
+               fsdp: bool = True, unroll: bool = False,
+               act_sharding: bool = True,
+               seq_model: bool = False) -> DryRunCase:
+    cfg = resolve_config(arch_id, shape_name, unroll=unroll)
+    if act_sharding:
+        batch_axes = (("pod", "data") if "pod" in mesh.shape else ("data",))
+        # sequence-parallel anchors pay off for TRAINING (the saved
+        # activation carry dominates); for prefill/decode they add
+        # per-layer gathers (measured: minicpm3 prefill t_coll 0.12->0.55),
+        # and for RWKV the seq axis is the recurrence axis (measured:
+        # 26->110 GB regression). EXPERIMENTS.md §Perf fleet notes.
+        sm = (seq_model and not cfg.rwkv
+              and INPUT_SHAPES[shape_name].kind == "train")
+        hooks.set_activation_sharding(batch_axes, "model", seq_model=sm)
+    else:
+        hooks.clear()
+    shp = INPUT_SHAPES[shape_name]
+    b, s = shp.global_batch, shp.seq_len
+    init_fn = functools.partial(api.init_params, cfg)
+    params_sds = _abstract_params(cfg, lambda k: init_fn(k))
+    pspecs = shardings.param_specs(params_sds, mesh, fsdp=fsdp)
+
+    if shp.kind == "train":
+        opt = make_optimizer(arch_id, cfg)
+        opt_sds = jax.eval_shape(opt.init, params_sds)
+        ospecs = shardings.opt_specs(opt_sds, pspecs)
+        batch_sds = _lm_batch_sds(cfg, b, s)
+        bspecs = shardings.batch_specs(batch_sds, mesh)
+
+        def train_step(params, opt_state, batch):
+            def lf(p):
+                return api.loss_fn(cfg, p, batch, remat=remat)
+
+            (loss, metrics), grads = jax.value_and_grad(
+                lf, has_aux=True)(params)
+            ups, opt_state = opt.update(grads, opt_state, params)
+            params = optim.apply_updates(params, ups)
+            return params, opt_state, metrics
+
+        return DryRunCase(arch_id, shape_name, train_step,
+                          (params_sds, opt_sds, batch_sds),
+                          (pspecs, ospecs, bspecs))
+
+    if shp.kind == "prefill":
+        batch_sds = _lm_batch_sds(cfg, b, s)
+        bspecs = shardings.batch_specs(batch_sds, mesh)
+
+        if cfg.encoder_layers > 0:
+            def prefill_step(params, batch):
+                enc = whisper.encode(cfg, params, batch["frames"])
+                feats, _ = whisper.forward(cfg, params, batch["tokens"],
+                                           batch["frames"])
+                logits = (feats[:, -1] @ whisper.lm_head_weight(params))
+                return logits.astype(jnp.float32), enc
+        else:
+            def prefill_step(params, batch):
+                return transformer.prefill(
+                    cfg, params, batch["tokens"],
+                    img_embeds=batch.get("img_embeds"))
+
+        return DryRunCase(arch_id, shape_name, prefill_step,
+                          (params_sds, batch_sds), (pspecs, bspecs))
+
+    # ---- decode ----
+    if cfg.encoder_layers > 0:
+        cache_len = min(s, cfg.max_decoder_len)
+        hd = cfg.d_model // cfg.n_heads
+        cache_sds = {
+            "self": jax.tree.map(
+                lambda a: jax.ShapeDtypeStruct((cfg.n_layers,) + a.shape,
+                                               a.dtype),
+                {"k": jax.ShapeDtypeStruct((b, cache_len, cfg.n_heads, hd),
+                                           cfg.dt),
+                 "v": jax.ShapeDtypeStruct((b, cache_len, cfg.n_heads, hd),
+                                           cfg.dt),
+                 "slot_pos": jax.ShapeDtypeStruct((b, cache_len), jnp.int32)}),
+            "cross": {
+                "k": jax.ShapeDtypeStruct(
+                    (cfg.n_layers, b, cfg.encoder_seq, cfg.n_heads, hd),
+                    cfg.dt),
+                "v": jax.ShapeDtypeStruct(
+                    (cfg.n_layers, b, cfg.encoder_seq, cfg.n_heads, hd),
+                    cfg.dt)},
+        }
+
+        def serve_step(params, cache, tokens, pos):
+            return whisper.decode_step(cfg, params, cache, tokens, pos)
+    else:
+        cache_len = transformer.cache_physical_len(cfg, s)
+        cache_sds = jax.eval_shape(
+            lambda: transformer.init_cache(cfg, b, cache_len))
+
+        def serve_step(params, cache, tokens, pos):
+            return transformer.decode_step(cfg, params, cache, tokens, pos)
+
+    cspecs = shardings.cache_specs(cache_sds, mesh)
+    tok_sds = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    pos_sds = jax.ShapeDtypeStruct((b,), jnp.int32)
+    dsize = mesh.shape.get("data", 1)
+    tspec = P("data", None) if b % dsize == 0 and b >= dsize else P(None, None)
+    pspec_tok = P("data") if b % dsize == 0 and b >= dsize else P(None)
+
+    return DryRunCase(arch_id, shape_name, serve_step,
+                      (params_sds, cache_sds, tok_sds, pos_sds),
+                      (pspecs, cspecs, tspec, pspec_tok))
+
+
+# --------------------------------------------------------------------------
+# FACADE production step: 2 pod-scale nodes, gossip across the 'pod' axis
+def build_facade_case(arch_id: str, mesh, *, n_nodes: int = 2, k: int = 2,
+                      batch_per_node: int = 16, seq: int = 4096,
+                      local_steps: int = 1,
+                      act_sharding: bool = True) -> DryRunCase:
+    cfg = get_config(arch_id)
+    binding = make_binding(cfg)
+    if act_sharding:
+        # within a FACADE node the batch lives on 'data' only (the node
+        # axis owns 'pod'); batch_per_node defaults to the data-axis size
+        hooks.set_activation_sharding(("data",), "model", seq_model=True)
+    else:
+        hooks.clear()
+    fcfg = facade_mod.FacadeConfig(n_nodes=n_nodes, k=k, degree=1,
+                                   local_steps=local_steps, lr=1e-3)
+
+    def init_state(key):
+        from repro.core.state import init_facade_state
+        return init_facade_state(binding, key, n_nodes, k)
+
+    state_sds = jax.eval_shape(init_state, jax.ShapeDtypeStruct((2,),
+                                                                jnp.uint32))
+    pod = "pod" if "pod" in mesh.shape else None
+    core_specs = shardings.param_specs(state_sds.cores, mesh, fsdp=True,
+                                       node_axis=True)
+    head_specs = jax.tree_util.tree_map_with_path(
+        lambda path, leaf: shardings.leaf_spec(
+            shardings._path_str(path), leaf.shape, mesh, fsdp=True,
+            skip_leading=0, extra_leading=(pod, None)),
+        state_sds.heads)
+    state_specs = FacadeState(
+        cores=core_specs, heads=head_specs,
+        cluster_id=P(pod), round=P(), rng=P())
+
+    bsds = {
+        "tokens": jax.ShapeDtypeStruct(
+            (n_nodes, local_steps, batch_per_node, seq), jnp.int32),
+        "labels": jax.ShapeDtypeStruct(
+            (n_nodes, local_steps, batch_per_node, seq), jnp.int32),
+        "mask": jax.ShapeDtypeStruct(
+            (n_nodes, local_steps, batch_per_node, seq), jnp.float32),
+    }
+    bspecs = jax.tree.map(
+        lambda sds: P(pod, None, "data" if batch_per_node % mesh.shape.get(
+            "data", 1) == 0 else None, None), bsds)
+
+    def facade_step(state, batches):
+        return facade_mod.facade_round(fcfg, binding, state, batches)
+
+    return DryRunCase(arch_id, "facade_pod", facade_step,
+                      (state_sds, bsds), (state_specs, bspecs))

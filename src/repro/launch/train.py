@@ -1,0 +1,157 @@
+"""Training launcher.
+
+Two modes:
+
+* ``paper`` (default) — the paper's experiments: FACADE / EL / D-PSGD /
+  DEPRL / DAC over a synthetic clustered dataset with feature skew
+  (CNN models, CPU-sized). This is the end-to-end driver behind every
+  table in EXPERIMENTS.md.
+
+      python -m repro.launch.train --algo facade --clusters 30 2 \\
+          --rounds 200 --k 2
+
+* ``lm`` — one-process LM pretraining of any assigned architecture's
+  SMOKE variant on synthetic clustered token streams (proves the full
+  substrate — data pipeline, optimizer, checkpointing — end to end).
+
+      python -m repro.launch.train --mode lm --arch llama3.2-1b \\
+          --steps 200 --batch 8 --seq 256
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs as _configs  # noqa: F401
+from repro import optim
+from repro.checkpoint import io as ckpt_io
+from repro.core.runner import run_experiment
+from repro.configs.facade_paper import lenet, resnet8
+from repro.data import tokens as tokens_mod
+from repro.data.synthetic import SynthSpec, make_clustered_data
+from repro.models import api
+from repro.models.base import get_config, list_archs
+
+
+def paper_main(args) -> None:
+    spec = SynthSpec(n_classes=args.n_classes, image_size=args.image_size,
+                     samples_per_class=args.samples_per_class, seed=args.seed)
+    transforms = args.transforms or None
+    ds = make_clustered_data(spec, tuple(args.clusters), transforms)
+    cfg = (resnet8(smoke=args.smoke) if args.model == "resnet8"
+           else lenet(smoke=args.smoke))
+    cfg = cfg.replace(n_classes=args.n_classes, image_size=args.image_size)
+
+    res = run_experiment(
+        args.algo, cfg, ds, rounds=args.rounds, k=args.k,
+        degree=args.degree, local_steps=args.local_steps,
+        batch_size=args.batch, lr=args.lr, eval_every=args.eval_every,
+        seed=args.seed, warmup_rounds=args.warmup_rounds,
+        target_acc=args.target_acc, verbose=True)
+
+    print(json.dumps({
+        "algo": args.algo, "clusters": args.clusters,
+        "final_acc_per_cluster": res.final_acc,
+        "best_fair_acc": res.best_fair_acc(),
+        "dp": res.dp, "eo": res.eo,
+        "total_gb": res.comm.total_gb,
+    }, indent=2))
+    if args.out:
+        pathlib.Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+        with open(args.out, "a") as f:
+            f.write(json.dumps({
+                "algo": args.algo, "clusters": args.clusters,
+                "acc_hist": res.acc_per_cluster, "fair_hist": res.fair_acc,
+                "dp": res.dp, "eo": res.eo,
+                "comm": {"rounds": res.comm.rounds, "bytes": res.comm.bytes, "acc": res.comm.acc}}) + "\n")
+
+
+def lm_main(args) -> None:
+    cfg = get_config(args.arch, smoke=True)
+    key = jax.random.PRNGKey(args.seed)
+    k_init, k_data = jax.random.split(key)
+    params = api.init_params(cfg, k_init)
+    opt = optim.adamw(args.lr)
+    opt_state = opt.init(params)
+
+    tspec = tokens_mod.TokenSpec(vocab_size=cfg.vocab_size,
+                                 seq_len=args.seq + 1, seed=args.seed)
+    stream = tokens_mod.make_clustered_tokens(
+        tspec, (1,), seqs_per_node=args.steps * args.batch)
+    train = stream["train"][0]  # [N, S+1]
+
+    def extra(batch):
+        if cfg.arch_type == "vlm":
+            batch["img_embeds"] = jnp.zeros(
+                (args.batch, cfg.n_image_tokens, cfg.d_model), cfg.dt)
+        if cfg.encoder_layers > 0:
+            batch["frames"] = jnp.zeros(
+                (args.batch, cfg.encoder_seq, cfg.d_model), cfg.dt)
+        return batch
+
+    @jax.jit
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: api.loss_fn(cfg, p, batch), has_aux=True)(params)
+        ups, opt_state = opt.update(grads, opt_state, params)
+        return optim.apply_updates(params, ups), opt_state, loss, metrics
+
+    t0 = time.time()
+    for step in range(args.steps):
+        rows = train[step * args.batch:(step + 1) * args.batch]
+        batch = extra({k: jnp.asarray(v)
+                       for k, v in tokens_mod.lm_batch(rows).items()})
+        params, opt_state, loss, metrics = train_step(
+            params, opt_state, batch)
+        if (step + 1) % args.log_every == 0 or step == 0:
+            print(f"step {step+1:5d}  loss {float(loss):.4f}  "
+                  f"acc {float(metrics['acc']):.3f}  "
+                  f"{(step+1)/(time.time()-t0):.2f} it/s", flush=True)
+    if args.ckpt:
+        ckpt_io.save(args.ckpt, {"params": params, "step": args.steps})
+        print(f"checkpoint -> {args.ckpt}")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--mode", choices=("paper", "lm"), default="paper")
+    # paper mode
+    ap.add_argument("--algo", default="facade",
+                    choices=("facade", "el", "dpsgd", "deprl", "dac"))
+    ap.add_argument("--model", default="lenet", choices=("lenet", "resnet8"))
+    ap.add_argument("--clusters", type=int, nargs="+", default=[30, 2])
+    ap.add_argument("--transforms", nargs="+", default=None)
+    ap.add_argument("--k", type=int, default=None)
+    ap.add_argument("--rounds", type=int, default=200)
+    ap.add_argument("--degree", type=int, default=4)
+    ap.add_argument("--local-steps", type=int, default=10)
+    ap.add_argument("--warmup-rounds", type=int, default=0)
+    ap.add_argument("--eval-every", type=int, default=20)
+    ap.add_argument("--target-acc", type=float, default=None)
+    ap.add_argument("--n-classes", type=int, default=10)
+    ap.add_argument("--image-size", type=int, default=16)
+    ap.add_argument("--samples-per-class", type=int, default=16)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    # lm mode
+    ap.add_argument("--arch", default="llama3.2-1b", choices=list_archs())
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--ckpt", default=None)
+    # shared
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=0.01)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    (lm_main if args.mode == "lm" else paper_main)(args)
+
+
+if __name__ == "__main__":
+    main()

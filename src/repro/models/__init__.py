@@ -1,0 +1,1 @@
+from .base import CNNConfig, ModelConfig, get_config, list_archs, register  # noqa: F401

@@ -1,0 +1,288 @@
+"""Attention variants: GQA (opt. qk-norm, sliding window), MLA, KV caches.
+
+Two execution paths per variant:
+  * ``*_forward``  — train / prefill over a full sequence (causal).
+  * ``*_decode``   — one new token against a KV cache (full or ring-buffer).
+
+Masking is position-based everywhere: a kv slot participates iff
+``kv_pos >= 0  and  kv_pos <= q_pos  and (window == 0 or q_pos - kv_pos < window)``
+which uniformly covers causal masks, cache validity and sliding windows.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import hooks, layers
+from .base import ModelConfig
+
+NEG_INF = -1e30
+
+# full-sequence attention switches to the q-chunked path when the score
+# tensor Sq*Skv would exceed this (elements, per batch*head) — the pure-jnp
+# analogue of the Pallas flash kernel's blocking (kernels/flash_attention)
+CHUNK_THRESHOLD = 4096 * 4096
+CHUNK_Q = 4096
+
+
+# ==========================================================================
+# scaled dot-product attention with position masking
+def sdpa(q, k, v, q_pos, kv_pos, window: int = 0, scale: float | None = None):
+    """q [B,Sq,Hq,Dq]  k [B,Skv,Hkv,Dq]  v [B,Skv,Hkv,Dv]
+    q_pos [B,Sq] int, kv_pos [B,Skv] int (-1 = invalid slot).
+    Returns [B,Sq,Hq,Dv]. Softmax in fp32.
+
+    GQA is handled by broadcasting k/v up to Hq heads (a cheap view next to
+    the O(S^2) score tensor): the score tensor then carries the FULL q-head
+    axis, which — unlike the kv-head axis (often < mesh model size) — the
+    sharding hooks can pin to the model axis. This matches the Pallas flash
+    kernel's grid (one q head per cell, kv head = h // group)."""
+    b, sq, hq, dq = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(dq))
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+
+    # scores [B, Hq, Sq, Skv]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores.astype(jnp.float32) * scale
+    scores = hooks.shard_heads(scores, batch_dim=0, head_dim=1, seq_dim=2)
+
+    valid = (kv_pos[:, None, :] >= 0) & (kv_pos[:, None, :] <= q_pos[:, :, None])
+    if window > 0:
+        valid &= (q_pos[:, :, None] - kv_pos[:, None, :]) < window
+    scores = jnp.where(valid[:, None, :, :], scores, NEG_INF)
+
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w.astype(v.dtype), v)
+    return out
+
+
+def chunked_sdpa(q, k, v, q_pos, kv_pos, window: int = 0,
+                 scale: float | None = None, block_q: int = CHUNK_Q,
+                 unroll: int = 1):
+    """sdpa computed in q-blocks (sequential scan): the score tensor is
+    [B, bq, H, Skv] per step instead of [B, Sq, H, Skv] — how the TPU flash
+    kernel bounds VMEM, expressed in pure jnp so it lowers everywhere.
+    ``unroll`` mirrors cfg.scan_unroll for exact dry-run cost accounting."""
+    b, sq, hq, d = q.shape
+    bq = min(block_q, sq)
+    if sq % bq:
+        return sdpa(q, k, v, q_pos, kv_pos, window=window, scale=scale)
+    nq = sq // bq
+
+    qb = q.reshape(b, nq, bq, hq, d).transpose(1, 0, 2, 3, 4)
+    pb = q_pos.reshape(b, nq, bq).transpose(1, 0, 2)
+
+    def blk(_, inp):
+        qi, qpi = inp
+        return None, sdpa(qi, k, v, qpi, kv_pos, window=window, scale=scale)
+
+    _, ob = jax.lax.scan(blk, None, (qb, pb),
+                         unroll=min(unroll, nq) if unroll > 1 else 1)
+    return ob.transpose(1, 0, 2, 3, 4).reshape(b, sq, hq, -1)
+
+
+def sdpa_auto(q, k, v, q_pos, kv_pos, window: int = 0,
+              scale: float | None = None, unroll: int = 1):
+    """Pick direct vs q-chunked attention by score-tensor size."""
+    if q.shape[1] * k.shape[1] > CHUNK_THRESHOLD:
+        return chunked_sdpa(q, k, v, q_pos, kv_pos, window=window,
+                            scale=scale, unroll=unroll)
+    return sdpa(q, k, v, q_pos, kv_pos, window=window, scale=scale)
+
+
+# ==========================================================================
+# GQA
+def init_gqa(key, cfg: ModelConfig):
+    hd = cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": layers.dense_init(ks[0], cfg.d_model, cfg.n_heads * hd, cfg.dt),
+        "wk": layers.dense_init(ks[1], cfg.d_model, cfg.n_kv_heads * hd, cfg.dt),
+        "wv": layers.dense_init(ks[2], cfg.d_model, cfg.n_kv_heads * hd, cfg.dt),
+        "wo": layers.dense_init(ks[3], cfg.n_heads * hd, cfg.d_model, cfg.dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), cfg.dt)
+        p["k_norm"] = jnp.ones((hd,), cfg.dt)
+    return p
+
+
+def _gqa_qkv(cfg: ModelConfig, p, x, positions):
+    b, s, _ = x.shape
+    hd = cfg.hd
+    q = (x @ p["wq"]).reshape(b, s, cfg.n_heads, hd)
+    k = (x @ p["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (x @ p["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = layers.rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = layers.rms_norm(k, p["k_norm"], cfg.norm_eps)
+    cos, sin = layers.rope_freqs(positions, hd, cfg.rope_theta)
+    q = layers.apply_rope(q, cos, sin)
+    k = layers.apply_rope(k, cos, sin)
+    # q may fall back to sequence sharding; k/v must not (their seq axis is
+    # the softmax contraction) — they stay replicated if heads don't divide
+    return (hooks.shard_heads(q, seq_dim=1), hooks.shard_heads(k),
+            hooks.shard_heads(v))
+
+
+def gqa_forward(cfg: ModelConfig, p, x, positions, window: int = 0,
+                attn_fn=None):
+    """Causal self-attention over a full sequence. positions [B,S]."""
+    q, k, v = _gqa_qkv(cfg, p, x, positions)
+    if attn_fn is not None:
+        out = attn_fn(q, k, v, positions, window)
+    else:
+        out = sdpa_auto(q, k, v, positions, positions, window=window,
+                        unroll=cfg.scan_unroll)
+    b, s = x.shape[:2]
+    out = hooks.shard_batch(out)
+    return out.reshape(b, s, -1).astype(x.dtype) @ p["wo"]
+
+
+def gqa_init_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    hd = cfg.hd
+    return {
+        "k": jnp.zeros((batch, cache_len, cfg.n_kv_heads, hd), cfg.dt),
+        "v": jnp.zeros((batch, cache_len, cfg.n_kv_heads, hd), cfg.dt),
+        "slot_pos": jnp.full((batch, cache_len), -1, jnp.int32),
+    }
+
+
+def gqa_decode(cfg: ModelConfig, p, x, pos, cache, window: int = 0):
+    """One-token decode. x [B,1,D]; pos [B] int32 absolute position.
+
+    Works for both a full-length cache (cache_len >= pos) and a ring buffer
+    (cache_len == window): the write slot is ``pos % cache_len``.
+    """
+    b = x.shape[0]
+    q, k, v = _gqa_qkv(cfg, p, x, pos[:, None])
+    cache_len = cache["k"].shape[1]
+    slot = (pos % cache_len).astype(jnp.int32)
+
+    onehot = jax.nn.one_hot(slot, cache_len, dtype=cfg.dt)  # [B, L]
+    ck = cache["k"] * (1 - onehot)[:, :, None, None] + onehot[:, :, None, None] * k
+    cv = cache["v"] * (1 - onehot)[:, :, None, None] + onehot[:, :, None, None] * v
+    sp = jnp.where(onehot.astype(bool), pos[:, None], cache["slot_pos"])
+
+    out = sdpa(q, ck, cv, pos[:, None], sp, window=window)
+    y = out.reshape(b, 1, -1).astype(x.dtype) @ p["wo"]
+    return y, {"k": ck, "v": cv, "slot_pos": sp}
+
+
+# ==========================================================================
+# MLA — multi-head latent attention (MiniCPM3 / DeepSeek-V2 family)
+def init_mla(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 7)
+    h = cfg.n_heads
+    qd = cfg.qk_nope_dim + cfg.qk_rope_dim
+    p = {
+        "w_dq": layers.dense_init(ks[0], cfg.d_model, cfg.q_lora_rank, cfg.dt),
+        "q_norm": jnp.ones((cfg.q_lora_rank,), cfg.dt),
+        "w_uq": layers.dense_init(ks[1], cfg.q_lora_rank, h * qd, cfg.dt),
+        # joint compression: [kv_rank | rope_dim]
+        "w_dkv": layers.dense_init(ks[2], cfg.d_model,
+                                   cfg.kv_lora_rank + cfg.qk_rope_dim, cfg.dt),
+        "kv_norm": jnp.ones((cfg.kv_lora_rank,), cfg.dt),
+        "w_uk": layers.dense_init(ks[3], cfg.kv_lora_rank,
+                                  h * cfg.qk_nope_dim, cfg.dt),
+        "w_uv": layers.dense_init(ks[4], cfg.kv_lora_rank,
+                                  h * cfg.v_head_dim, cfg.dt),
+        "wo": layers.dense_init(ks[5], h * cfg.v_head_dim, cfg.d_model, cfg.dt),
+    }
+    return p
+
+
+def _mla_q(cfg: ModelConfig, p, x, positions):
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    cq = layers.rms_norm(x @ p["w_dq"], p["q_norm"], cfg.norm_eps)
+    q = (cq @ p["w_uq"]).reshape(b, s, h, cfg.qk_nope_dim + cfg.qk_rope_dim)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+    cos, sin = layers.rope_freqs(positions, cfg.qk_rope_dim, cfg.rope_theta)
+    q_rope = layers.apply_rope(q_rope, cos, sin)
+    return q_nope, q_rope
+
+
+def _mla_ckv(cfg: ModelConfig, p, x, positions):
+    ckv = x @ p["w_dkv"]
+    c_kv, k_rope = jnp.split(ckv, [cfg.kv_lora_rank], axis=-1)
+    c_kv = layers.rms_norm(c_kv, p["kv_norm"], cfg.norm_eps)
+    cos, sin = layers.rope_freqs(positions, cfg.qk_rope_dim, cfg.rope_theta)
+    k_rope = layers.apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def mla_forward(cfg: ModelConfig, p, x, positions, window: int = 0):
+    """Train/prefill MLA: decompress k/v, run standard attention."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q_nope, q_rope = _mla_q(cfg, p, x, positions)
+    c_kv, k_rope = _mla_ckv(cfg, p, x, positions)
+
+    k_nope = (c_kv @ p["w_uk"]).reshape(b, s, h, cfg.qk_nope_dim)
+    v = (c_kv @ p["w_uv"]).reshape(b, s, h, cfg.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (b, s, h, cfg.qk_rope_dim))], axis=-1)
+    q = hooks.shard_heads(q, seq_dim=1)
+    k, v = hooks.shard_heads(k), hooks.shard_heads(v)
+    out = sdpa_auto(q, k, v, positions, positions, window=window,
+                    unroll=cfg.scan_unroll)
+    out = hooks.shard_batch(out)
+    return out.reshape(b, s, -1).astype(x.dtype) @ p["wo"]
+
+
+def mla_init_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    return {
+        "c_kv": jnp.zeros((batch, cache_len, cfg.kv_lora_rank), cfg.dt),
+        "k_rope": jnp.zeros((batch, cache_len, cfg.qk_rope_dim), cfg.dt),
+        "slot_pos": jnp.full((batch, cache_len), -1, jnp.int32),
+    }
+
+
+def mla_decode(cfg: ModelConfig, p, x, pos, cache, window: int = 0):
+    """Absorbed one-token MLA decode: attention runs in the compressed space.
+
+    score_h = q_nope_h Wuk_h^T c_kv^T + q_rope · k_rope
+    out_h   = (alpha_h @ c_kv) Wuv_h
+    The cache never stores per-head k/v — that is MLA's memory saving.
+    """
+    b = x.shape[0]
+    h = cfg.n_heads
+    q_nope, q_rope = _mla_q(cfg, p, x, pos[:, None])      # [B,1,H,*]
+    c_new, r_new = _mla_ckv(cfg, p, x, pos[:, None])      # [B,1,rank],[B,1,rd]
+
+    cache_len = cache["c_kv"].shape[1]
+    slot = (pos % cache_len).astype(jnp.int32)
+    onehot = jax.nn.one_hot(slot, cache_len, dtype=cfg.dt)
+    c_kv = cache["c_kv"] * (1 - onehot)[..., None] + onehot[..., None] * c_new
+    k_rope = cache["k_rope"] * (1 - onehot)[..., None] + onehot[..., None] * r_new
+    sp = jnp.where(onehot.astype(bool), pos[:, None], cache["slot_pos"])
+
+    wuk = p["w_uk"].reshape(cfg.kv_lora_rank, h, cfg.qk_nope_dim)
+    # absorb: q_abs [B,H,rank]
+    q_abs = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], wuk)
+    scores = jnp.einsum("bhr,bsr->bhs", q_abs, c_kv,
+                        preferred_element_type=jnp.float32)
+    scores += jnp.einsum("bhd,bsd->bhs", q_rope[:, 0], k_rope,
+                         preferred_element_type=jnp.float32)
+    scores = scores.astype(jnp.float32) / jnp.sqrt(
+        cfg.qk_nope_dim + cfg.qk_rope_dim)
+
+    valid = (sp >= 0) & (sp <= pos[:, None])
+    if window > 0:
+        valid &= (pos[:, None] - sp) < window
+    scores = jnp.where(valid[:, None, :], scores, NEG_INF)
+    alpha = jax.nn.softmax(scores, axis=-1).astype(cfg.dt)
+
+    out_c = jnp.einsum("bhs,bsr->bhr", alpha, c_kv)
+    wuv = p["w_uv"].reshape(cfg.kv_lora_rank, h, cfg.v_head_dim)
+    out = jnp.einsum("bhr,rhd->bhd", out_c, wuv).reshape(b, 1, -1)
+    y = out.astype(x.dtype) @ p["wo"]
+    return y, {"c_kv": c_kv, "k_rope": k_rope, "slot_pos": sp}

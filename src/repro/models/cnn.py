@@ -1,0 +1,170 @@
+"""The paper's experimental models: GN-LeNet (CIFAR-10/Imagenette runs) and
+ResNet8 (Flickr-Mammals runs), both with GroupNorm as in Hsieh et al. [41].
+
+FACADE head split (paper Sec. V-A "Models"):
+  * GN-LeNet  — head = final fully-connected layer.
+  * ResNet8   — head = last two basic blocks + final FC.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .base import CNNConfig
+
+
+def conv_init(key, kh, kw, cin, cout, dtype):
+    fan_in = kh * kw * cin
+    w = jax.random.normal(key, (kh, kw, cin, cout)) * jnp.sqrt(2.0 / fan_in)
+    return w.astype(dtype)
+
+
+def conv2d(x, w, stride: int = 1):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def _gn_params(c, dtype):
+    return {"g": jnp.ones((c,), dtype), "b": jnp.zeros((c,), dtype)}
+
+
+# ==========================================================================
+# GN-LeNet
+def init_lenet(cfg: CNNConfig, key):
+    w = cfg.width
+    ks = jax.random.split(key, 4)
+    feat = (cfg.image_size // 8) ** 2 * w
+    return {
+        "conv1": {"w": conv_init(ks[0], 3, 3, cfg.channels, w, cfg.dt),
+                  "gn": _gn_params(w, cfg.dt)},
+        "conv2": {"w": conv_init(ks[1], 3, 3, w, w, cfg.dt),
+                  "gn": _gn_params(w, cfg.dt)},
+        "conv3": {"w": conv_init(ks[2], 3, 3, w, w, cfg.dt),
+                  "gn": _gn_params(w, cfg.dt)},
+        "fc": {"w": layers.dense_init(ks[3], feat, cfg.n_classes, cfg.dt),
+               "b": jnp.zeros((cfg.n_classes,), cfg.dt)},
+    }
+
+
+def lenet_features(cfg: CNNConfig, params, x):
+    """x [B,H,W,C] -> flattened conv features (the FACADE *core*)."""
+    for name in ("conv1", "conv2", "conv3"):
+        p = params[name]
+        x = conv2d(x, p["w"])
+        x = layers.group_norm(x, p["gn"]["g"], p["gn"]["b"], cfg.groups)
+        x = jax.nn.relu(x)
+        x = maxpool2(x)
+    return x.reshape(x.shape[0], -1)
+
+
+def lenet_head(cfg: CNNConfig, head_params, feats):
+    return feats @ head_params["fc"]["w"] + head_params["fc"]["b"]
+
+
+def lenet_forward(cfg: CNNConfig, params, x):
+    return lenet_head(cfg, {"fc": params["fc"]}, lenet_features(cfg, params, x))
+
+
+LENET_HEAD_KEYS = ("fc",)
+
+
+# ==========================================================================
+# ResNet8 (GN): stem + 3 basic blocks (16,32,64) + FC
+def _init_block(key, cin, cout, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"conv1": conv_init(k1, 3, 3, cin, cout, dtype),
+         "gn1": _gn_params(cout, dtype),
+         "conv2": conv_init(k2, 3, 3, cout, cout, dtype),
+         "gn2": _gn_params(cout, dtype)}
+    if cin != cout:
+        p["proj"] = conv_init(k3, 1, 1, cin, cout, dtype)
+    return p
+
+
+def _block(cfg: CNNConfig, p, x, stride: int):
+    h = conv2d(x, p["conv1"], stride)
+    h = jax.nn.relu(layers.group_norm(h, p["gn1"]["g"], p["gn1"]["b"],
+                                      cfg.groups))
+    h = conv2d(h, p["conv2"])
+    h = layers.group_norm(h, p["gn2"]["g"], p["gn2"]["b"], cfg.groups)
+    if "proj" in p:
+        x = conv2d(x, p["proj"], stride)
+    elif stride != 1:
+        x = x[:, ::stride, ::stride]
+    return jax.nn.relu(h + x)
+
+
+def init_resnet8(cfg: CNNConfig, key):
+    w = cfg.width // 2  # stem width 16 for width=32
+    ks = jax.random.split(key, 5)
+    return {
+        "stem": {"w": conv_init(ks[0], 3, 3, cfg.channels, w, cfg.dt),
+                 "gn": _gn_params(w, cfg.dt)},
+        "block1": _init_block(ks[1], w, w, cfg.dt),
+        "block2": _init_block(ks[2], w, 2 * w, cfg.dt),
+        "block3": _init_block(ks[3], 2 * w, 4 * w, cfg.dt),
+        "fc": {"w": layers.dense_init(ks[4], 4 * w, cfg.n_classes, cfg.dt),
+               "b": jnp.zeros((cfg.n_classes,), cfg.dt)},
+    }
+
+
+def resnet8_features(cfg: CNNConfig, params, x):
+    """Core: stem + block1 (head owns block2, block3, fc)."""
+    p = params["stem"]
+    x = jax.nn.relu(layers.group_norm(conv2d(x, p["w"]), p["gn"]["g"],
+                                      p["gn"]["b"], cfg.groups))
+    return _block(cfg, params["block1"], x, stride=1)
+
+
+def resnet8_head(cfg: CNNConfig, head_params, feats):
+    h = _block(cfg, head_params["block2"], feats, stride=2)
+    h = _block(cfg, head_params["block3"], h, stride=2)
+    h = h.mean(axis=(1, 2))
+    return h @ head_params["fc"]["w"] + head_params["fc"]["b"]
+
+
+def resnet8_forward(cfg: CNNConfig, params, x):
+    head = {k: params[k] for k in RESNET8_HEAD_KEYS}
+    return resnet8_head(cfg, head, resnet8_features(cfg, params, x))
+
+
+RESNET8_HEAD_KEYS = ("block2", "block3", "fc")
+
+
+# ==========================================================================
+# uniform API used by the FACADE trainer
+def init_params(cfg: CNNConfig, key):
+    return init_lenet(cfg, key) if cfg.kind == "lenet" else init_resnet8(cfg, key)
+
+
+def features(cfg: CNNConfig, params, x):
+    return (lenet_features(cfg, params, x) if cfg.kind == "lenet"
+            else resnet8_features(cfg, params, x))
+
+
+def head_apply(cfg: CNNConfig, head_params, feats):
+    return (lenet_head(cfg, head_params, feats) if cfg.kind == "lenet"
+            else resnet8_head(cfg, head_params, feats))
+
+
+def head_keys(cfg: CNNConfig):
+    return LENET_HEAD_KEYS if cfg.kind == "lenet" else RESNET8_HEAD_KEYS
+
+
+def forward(cfg: CNNConfig, params, x):
+    return (lenet_forward(cfg, params, x) if cfg.kind == "lenet"
+            else resnet8_forward(cfg, params, x))
+
+
+def loss_fn(cfg: CNNConfig, params, batch):
+    logits = forward(cfg, params, batch["x"])
+    loss = layers.softmax_xent(logits, batch["y"])
+    acc = (jnp.argmax(logits, -1) == batch["y"]).mean()
+    return loss, {"ce": loss, "acc": acc}

@@ -1,0 +1,103 @@
+"""Activation-sharding hooks.
+
+Model code is mesh-agnostic; launchers opt in by installing axis names here
+(before tracing). Each hook is a no-op unless axes are installed AND the
+dimension divides — so tests/smoke runs on 1 CPU device are untouched.
+
+GSPMD propagates input shardings, but without anchors it may re-shard
+intermediates badly (we measured fully-replicated batch dims on the residual
+stream — see EXPERIMENTS.md §Perf iteration 1). These constraints pin:
+  * the residual stream batch dim to the data axes,
+  * attention head dims to the model axis.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_BATCH_AXES: tuple | None = None
+_MODEL_AXIS: str | None = None
+_SEQ_MODEL: bool = False
+
+
+def set_activation_sharding(batch_axes, model_axis=None,
+                            seq_model: bool = False) -> None:
+    """``seq_model=True`` additionally shards dim 1 (sequence) of the
+    residual stream on the model axis — Megatron-style sequence
+    parallelism for the SAVED activations. The per-layer matmuls gather
+    what they need; the layer-boundary carry (what scan/remat stores for
+    the backward pass) stays 1/model-size per device."""
+    global _BATCH_AXES, _MODEL_AXIS, _SEQ_MODEL
+    _BATCH_AXES = tuple(batch_axes) if batch_axes else None
+    _MODEL_AXIS = model_axis
+    _SEQ_MODEL = seq_model
+
+
+def clear() -> None:
+    set_activation_sharding(None, None)
+
+
+def data_axis_size() -> int:
+    """Trace-time size of the data axes (1 when hooks are inactive) —
+    used by the MoE grouped dispatch to pick its group count."""
+    if _BATCH_AXES is None:
+        return 1
+    m = _mesh()
+    return 1 if m is None else _axis_size(m, _BATCH_AXES)
+
+
+def _axis_size(mesh, axes) -> int:
+    n = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        n *= dict(zip(mesh.axis_names, mesh.axis_sizes)).get(a, 1)
+    return n
+
+
+def _mesh():
+    m = jax.sharding.get_abstract_mesh()
+    return m if m is not None and m.axis_names else None
+
+
+def shard_batch(x, batch_dim: int = 0):
+    """Constrain x's batch dim onto the data axes (replicated elsewhere;
+    with seq_model also dim batch_dim+1 onto the model axis)."""
+    if _BATCH_AXES is None:
+        return x
+    m = _mesh()
+    if m is None or x.shape[batch_dim] % _axis_size(m, _BATCH_AXES):
+        return x
+    spec = [None] * x.ndim
+    spec[batch_dim] = _BATCH_AXES if len(_BATCH_AXES) > 1 else _BATCH_AXES[0]
+    if (_SEQ_MODEL and _MODEL_AXIS and x.ndim > batch_dim + 1
+            and x.shape[batch_dim + 1] % _axis_size(m, _MODEL_AXIS) == 0):
+        spec[batch_dim + 1] = _MODEL_AXIS
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def shard_heads(x, batch_dim: int = 0, head_dim: int = 2,
+                seq_dim: int | None = None):
+    """Constrain [B, S, H, D]-shaped activations: batch->data, heads->model.
+
+    When the head count does not divide the model axis (llava's 56 heads,
+    hymba's 25 on a 16-way axis), fall back to sharding a sequence dim on
+    'model' instead — sequence parallelism for the attention interior. Pass
+    ``seq_dim`` to name it (e.g. the q dim of a [B, H, Sq, Skv] score
+    block); softmax axes must stay unsharded."""
+    if _BATCH_AXES is None and _MODEL_AXIS is None:
+        return x
+    m = _mesh()
+    if m is None:
+        return x
+    spec = [None] * x.ndim
+    if _BATCH_AXES and x.shape[batch_dim] % _axis_size(m, _BATCH_AXES) == 0:
+        spec[batch_dim] = (_BATCH_AXES if len(_BATCH_AXES) > 1
+                           else _BATCH_AXES[0])
+    if _MODEL_AXIS:
+        msize = _axis_size(m, _MODEL_AXIS)
+        if x.shape[head_dim] % msize == 0:
+            spec[head_dim] = _MODEL_AXIS
+        elif seq_dim is not None and x.shape[seq_dim] % msize == 0:
+            spec[seq_dim] = _MODEL_AXIS
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*spec))

@@ -1,0 +1,149 @@
+"""Mixture-of-experts FFN with capacity-based (GShard-style) dispatch.
+
+Design notes (TPU adaptation):
+  * dispatch/combine are expressed as scatter/gather into a dense
+    ``[E, C, D]`` buffer; with the expert axis sharded on the ``model`` mesh
+    axis and tokens sharded on ``data``, GSPMD lowers the scatter into the
+    all-to-all the paper's MoE baselines would issue by hand.
+  * compute cost is ``K * capacity_factor`` x the active-expert FLOPs —
+    NOT ``E`` x — so the roofline "useful FLOPs" ratio stays honest for
+    grok-1 (8e top-2) and deepseek-moe (64e top-6).
+  * router math in fp32; aux load-balance loss per Switch Transformer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import hooks, layers
+from .base import ModelConfig
+
+
+def init_moe(key, cfg: ModelConfig):
+    e = cfg.n_experts
+    ff = cfg.moe_d_ff or cfg.d_ff
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+
+    def expert_stack(k, d_in, d_out):
+        kk = jax.random.split(k, e)
+        return jnp.stack([layers.dense_init(ki, d_in, d_out, cfg.dt)
+                          for ki in kk])
+
+    p = {
+        "router": layers.dense_init(ks[0], d, e, jnp.float32),
+        "w_gate": expert_stack(ks[1], d, ff),
+        "w_up": expert_stack(ks[2], d, ff),
+        "w_down": expert_stack(ks[3], ff, d),
+    }
+    if cfg.n_shared_experts > 0:
+        p["shared"] = layers.init_swiglu(
+            ks[4], d, cfg.n_shared_experts * ff, cfg.dt)
+    return p
+
+
+def moe_capacity(cfg: ModelConfig, n_tokens: int,
+                 capacity_factor: float | None = None) -> int:
+    cf = capacity_factor if capacity_factor is not None else cfg.capacity_factor
+    k = cfg.experts_per_token
+    c = int(cf * n_tokens * k / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8, floor 8
+
+
+def moe_forward(cfg: ModelConfig, p, x, capacity_factor: float | None = None):
+    """x [B,S,D] -> (out [B,S,D], aux_loss scalar fp32).
+
+    GShard-style GROUPED dispatch: tokens are split into G groups (G = the
+    data-axis size when the sharding hooks are active, else 1) and the
+    capacity rank is a cumsum WITHIN each group. A global cumsum would
+    serialize the token axis and force GSPMD to replicate the [E,C,D]
+    dispatch buffer on every device (measured: 21 GB/device f32 on
+    grok-1-314b train_4k, EXPERIMENTS.md §Perf pair B). With groups, every
+    dispatch tensor carries the group dim and shards on 'data'.
+    """
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.experts_per_token
+
+    g_n = hooks.data_axis_size()
+    if t % g_n:
+        g_n = 1
+    tg = t // g_n                                               # tokens/group
+    xt = hooks.shard_batch(x.reshape(g_n, tg, d))               # [G,Tg,D]
+
+    logits = xt.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)                     # [G,Tg,E]
+    topw, topi = jax.lax.top_k(probs, k)                        # [G,Tg,K]
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    # ---- aux load-balance loss (Switch): E * sum_e f_e * P_e ----
+    sel = jax.nn.one_hot(topi, e, dtype=jnp.float32).sum(2)     # [G,Tg,E]
+    f_e = sel.mean((0, 1)) / k
+    p_e = probs.mean((0, 1))
+    aux = e * jnp.sum(f_e * p_e)
+
+    # ---- dispatch: (token,k) -> [G, E, Cg, D], rank within (group,expert)
+    cap = moe_capacity(cfg, tg, capacity_factor)
+    eid = topi.reshape(g_n, tg * k)                             # [G,TgK]
+    oh = jax.nn.one_hot(eid, e, dtype=jnp.int32)                # [G,TgK,E]
+    pos = (jnp.cumsum(oh, axis=1) - oh)
+    pos = (pos * oh).sum(-1)                                    # [G,TgK]
+    tok = jnp.repeat(xt, k, axis=1)                             # [G,TgK,D]
+
+    # vmap over groups: GSPMD partitions a BATCHED scatter on the group dim
+    # cleanly; a leading broadcast-index scatter gets replicated (measured
+    # 14x temp difference at 256 devices — EXPERIMENTS.md §Perf pair B)
+    def scatter_group(tok_g, eid_g, pos_g):
+        return jnp.zeros((e, cap, d), x.dtype).at[eid_g, pos_g].set(
+            tok_g, mode="drop")
+
+    buf = jax.vmap(scatter_group)(tok, eid, pos)                # [G,E,Cg,D]
+    buf = hooks.shard_batch(buf)
+
+    # ---- expert FFN (batched einsum over experts) ----
+    gg = jnp.einsum("gecd,edf->gecf", buf, p["w_gate"])
+    uu = jnp.einsum("gecd,edf->gecf", buf, p["w_up"])
+    h = jax.nn.silu(gg.astype(jnp.float32)).astype(x.dtype) * uu
+    ob = jnp.einsum("gecf,efd->gecd", h, p["w_down"])           # [G,E,Cg,D]
+
+    # ---- combine ----
+    keep = (pos < cap).astype(x.dtype)                          # [G,TgK]
+    pos_c = jnp.minimum(pos, cap - 1)
+    back = jax.vmap(lambda ob_g, e_g, p_g: ob_g[e_g, p_g])(
+        ob, eid, pos_c)                                         # [G,TgK,D]
+    w_flat = topw.reshape(g_n, tg * k).astype(x.dtype) * keep
+    out = (back * w_flat[..., None]).reshape(g_n, tg, k, d).sum(2)
+
+    if "shared" in p:
+        out = out + layers.swiglu(p["shared"], xt)
+    return out.reshape(b, s, d), aux
+
+
+def moe_forward_dense(cfg: ModelConfig, p, x):
+    """Oracle: compute every expert on every token, weight by sparse gates.
+
+    Exponentially more FLOPs; used only in tests to validate the capacity
+    dispatch (with capacity_factor large enough that nothing drops, the two
+    must agree to float tolerance).
+    """
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.experts_per_token
+    xt = x.reshape(t, d)
+    logits = xt.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+    gates = jnp.zeros((t, e), jnp.float32)
+    gates = gates.at[jnp.arange(t)[:, None], topi].set(topw)
+
+    g = jnp.einsum("td,edf->etf", xt, p["w_gate"])
+    u = jnp.einsum("td,edf->etf", xt, p["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    ye = jnp.einsum("etf,efd->etd", h, p["w_down"])            # [E,T,D]
+    out = jnp.einsum("te,etd->td", gates.astype(x.dtype), ye)
+    if "shared" in p:
+        out = out + layers.swiglu(p["shared"], xt)
+    sel = jax.nn.one_hot(topi, e, dtype=jnp.float32).sum(1)
+    aux = e * jnp.sum((sel.mean(0) / k) * probs.mean(0))
+    return out.reshape(b, s, d), aux

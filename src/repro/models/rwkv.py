@@ -1,0 +1,180 @@
+"""RWKV-6 "Finch" blocks [arXiv:2404.05892] — attention-free, data-dependent
+decay linear recurrence.
+
+Per head (head_dim = d/H) the time-mixing state is the matrix
+``S in R^{hd x hd}``:
+
+    wkv_t = r_t @ (S_{t-1} + diag(u) k_t^T v_t)
+    S_t   = diag(w_t) S_{t-1} + k_t^T v_t
+
+with the *data-dependent* per-channel decay ``w_t = exp(-exp(wb + lora(x_t)))``
+— the Finch signature. Training uses ``lax.scan`` over time (a chunked Pallas
+kernel lives in ``repro.kernels.rwkv6``); decode is an O(1) state update,
+which is why rwkv6 runs the 500k-token decode shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .base import ModelConfig
+
+HEAD_DIM = 64
+
+
+def n_heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // HEAD_DIM
+
+
+def init_time_mix(key, cfg: ModelConfig):
+    d = cfg.d_model
+    h = n_heads(cfg)
+    ks = jax.random.split(key, 9)
+    lora = 32
+    return {
+        # token-shift interpolation coefficients per stream
+        "mu_r": jnp.full((d,), 0.5, cfg.dt),
+        "mu_k": jnp.full((d,), 0.5, cfg.dt),
+        "mu_v": jnp.full((d,), 0.5, cfg.dt),
+        "mu_w": jnp.full((d,), 0.5, cfg.dt),
+        "mu_g": jnp.full((d,), 0.5, cfg.dt),
+        "w_r": layers.dense_init(ks[0], d, d, cfg.dt),
+        "w_k": layers.dense_init(ks[1], d, d, cfg.dt),
+        "w_v": layers.dense_init(ks[2], d, d, cfg.dt),
+        "w_g": layers.dense_init(ks[3], d, d, cfg.dt),
+        # data-dependent decay: w = exp(-exp(base + lora))
+        "decay_base": jnp.full((d,), -1.0, jnp.float32),
+        "w_dec1": layers.dense_init(ks[4], d, lora, cfg.dt),
+        "w_dec2": layers.dense_init(ks[5], lora, d, cfg.dt),
+        "bonus_u": (jax.random.normal(ks[6], (h, HEAD_DIM)) * 0.1
+                    ).astype(jnp.float32),
+        "ln_g": jnp.ones((d,), cfg.dt),  # per-head group norm gamma
+        "w_o": layers.dense_init(ks[7], d, d, cfg.dt),
+    }
+
+
+def init_channel_mix(key, cfg: ModelConfig):
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((d,), 0.5, cfg.dt),
+        "mu_r": jnp.full((d,), 0.5, cfg.dt),
+        "w_k": layers.dense_init(ks[0], d, ff, cfg.dt),
+        "w_v": layers.dense_init(ks[1], ff, d, cfg.dt),
+        "w_r": layers.dense_init(ks[2], d, d, cfg.dt),
+    }
+
+
+def _shift(x, last=None):
+    """Token shift: x_{t-1} stream. x [B,S,D]; last [B,D] for decode."""
+    if last is not None:
+        return last[:, None, :]
+    pad = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _mix(x, xp, mu):
+    return x * mu + xp * (1.0 - mu)
+
+
+def _decay(p, xw):
+    dd = (xw @ p["w_dec1"])
+    dd = jnp.tanh(dd.astype(jnp.float32)).astype(xw.dtype) @ p["w_dec2"]
+    return jnp.exp(-jnp.exp(p["decay_base"] + dd.astype(jnp.float32)))
+
+
+WKV_CHUNK = 256  # remat granularity of the wkv recurrence
+
+
+def _wkv_chunk(s0, rkvw, u):
+    r, k, v, w = rkvw  # each [B,c,H,hd]
+
+    def step(state, inp):
+        r_t, k_t, v_t, w_t = inp  # [B,H,hd]
+        kv = k_t[..., :, None] * v_t[..., None, :]         # [B,H,hd,hd]
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, state + u[:, :, None] * kv)
+        state = w_t[..., :, None] * state + kv
+        return state, y
+
+    sf, ys = jax.lax.scan(
+        step, s0,
+        (r.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+         v.transpose(1, 0, 2, 3), w.transpose(1, 0, 2, 3)))
+    return sf, ys.transpose(1, 0, 2, 3)
+
+
+def wkv_scan(r, k, v, w, u, s0=None, chunk: int = WKV_CHUNK):
+    """Reference linear recurrence. r,k,v,w [B,S,H,hd] fp32; u [H,hd].
+    Returns (y [B,S,H,hd], S_final [B,H,hd,hd]).
+
+    Processed in rematerialized chunks: the backward pass stores only the
+    per-chunk boundary states [B,H,hd,hd] (the same blocking as the Pallas
+    wkv kernel in ``kernels/rwkv6``), not every step's [B,H,hd,hd] state —
+    measured on rwkv6-1.6b train_4k in EXPERIMENTS.md §Perf fleet notes."""
+    b, s, h, hd = r.shape
+    s0 = jnp.zeros((b, h, hd, hd), jnp.float32) if s0 is None else s0
+    if s % chunk or s <= chunk:
+        sf, ys = _wkv_chunk(s0, (r, k, v, w), u)
+        return ys, sf
+
+    nc = s // chunk
+
+    def split(x):  # [B,S,H,hd] -> [nc,B,c,H,hd]
+        return x.reshape(b, nc, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+
+    @jax.checkpoint
+    def body(state, rkvw_c):
+        sf, ys = _wkv_chunk(state, rkvw_c, u)
+        return sf, ys
+
+    sf, ys = jax.lax.scan(body, s0, (split(r), split(k), split(v), split(w)))
+    ys = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, hd)
+    return ys, sf
+
+
+def _heads(x, h):
+    b, s, d = x.shape
+    return x.reshape(b, s, h, d // h)
+
+
+def time_mix(cfg: ModelConfig, p, x, state=None, last_x=None):
+    """state: [B,H,hd,hd] or None; last_x [B,D] (decode) or None."""
+    h = n_heads(cfg)
+    xp = _shift(x, last_x)
+    r = _heads(_mix(x, xp, p["mu_r"]) @ p["w_r"], h).astype(jnp.float32)
+    k = _heads(_mix(x, xp, p["mu_k"]) @ p["w_k"], h).astype(jnp.float32)
+    v = _heads(_mix(x, xp, p["mu_v"]) @ p["w_v"], h).astype(jnp.float32)
+    g = _mix(x, xp, p["mu_g"]) @ p["w_g"]
+    w = _heads(_decay(p, _mix(x, xp, p["mu_w"])), h)  # fp32 in (0,1)
+    k = k / jnp.sqrt(HEAD_DIM)
+
+    y, sf = wkv_scan(r, k, v, w, p["bonus_u"], s0=state)
+    b, s = x.shape[:2]
+    y = y.reshape(b, s, cfg.d_model)
+    # per-head group norm
+    yn = y.reshape(b, s, h, HEAD_DIM)
+    mu = yn.mean(-1, keepdims=True)
+    var = yn.var(-1, keepdims=True)
+    yn = (yn - mu) * jax.lax.rsqrt(var + 64e-5)
+    y = (yn.reshape(b, s, cfg.d_model)
+         * p["ln_g"].astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    return y @ p["w_o"], sf, x[:, -1, :]
+
+
+def channel_mix(cfg: ModelConfig, p, x, last_x=None):
+    xp = _shift(x, last_x)
+    k = _mix(x, xp, p["mu_k"]) @ p["w_k"]
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    r = jax.nn.sigmoid((_mix(x, xp, p["mu_r"]) @ p["w_r"]).astype(jnp.float32))
+    return (k @ p["w_v"]) * r.astype(x.dtype), x[:, -1, :]
+
+
+def rwkv_init_cache(cfg: ModelConfig, batch: int):
+    h = n_heads(cfg)
+    return {
+        "s": jnp.zeros((batch, h, HEAD_DIM, HEAD_DIM), jnp.float32),
+        "tm_x": jnp.zeros((batch, cfg.d_model), cfg.dt),
+        "cm_x": jnp.zeros((batch, cfg.d_model), cfg.dt),
+    }

@@ -1,0 +1,159 @@
+"""Selective SSM (Mamba-style) branch used by the hymba hybrid architecture.
+
+Hymba [arXiv:2411.13676] runs attention heads and mamba heads *in parallel*
+within each layer and fuses their (per-branch normalized) outputs. This
+module implements the mamba branch:
+
+    x -> in_proj -> (u, z); u -> causal depthwise conv -> silu
+    dt, B, C = proj(u);  h_t = exp(A*dt_t) . h_{t-1} + dt_t * (B_t  u_t)
+    y_t = (h_t C_t) + D . u_t;  out = (y * silu(z)) @ out_proj
+
+State is [B, d_inner, N] (N = ssm_state), carried by ``lax.scan`` during
+training/prefill and as an O(1) cache during decode — which is what makes
+hymba runnable at the 500k-token decode shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .base import ModelConfig
+
+
+def d_inner(cfg: ModelConfig) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def init_ssm(key, cfg: ModelConfig):
+    di, n = d_inner(cfg), cfg.ssm_state
+    ks = jax.random.split(key, 6)
+    dt_rank = max(1, cfg.d_model // 16)
+    p = {
+        "w_in": layers.dense_init(ks[0], cfg.d_model, 2 * di, cfg.dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, di)) * 0.1
+                   ).astype(cfg.dt),
+        "w_xproj": layers.dense_init(ks[2], di, dt_rank + 2 * n, cfg.dt),
+        "w_dt": layers.dense_init(ks[3], dt_rank, di, cfg.dt),
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        # A stored as log of negated continuous-time decay
+        "a_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "w_out": layers.dense_init(ks[4], di, cfg.d_model, cfg.dt),
+    }
+    return p
+
+
+def _dbc(cfg: ModelConfig, p, u):
+    """u [..., di] -> dt [..., di], b [..., N], c [..., N] (all fp32)."""
+    n = cfg.ssm_state
+    dt_rank = p["w_dt"].shape[0]
+    proj = (u @ p["w_xproj"]).astype(jnp.float32)
+    dt_r, b, c = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
+    dt = jax.nn.softplus(dt_r @ p["w_dt"].astype(jnp.float32) + p["dt_bias"])
+    return dt, b, c
+
+
+def _conv_causal(p, u, conv_cache=None):
+    """Depthwise causal conv over time. u [B,S,di]."""
+    kw = p["conv_w"].shape[0]
+    if conv_cache is not None:  # decode: cache holds last kw-1 inputs
+        window = jnp.concatenate([conv_cache, u], axis=1)  # [B,kw,di]
+        out = jnp.einsum("bkd,kd->bd", window, p["conv_w"])[:, None, :]
+        return out, window[:, 1:]
+    pad = jnp.zeros(u.shape[:1] + (kw - 1,) + u.shape[2:], u.dtype)
+    up = jnp.concatenate([pad, u], axis=1)
+    idx = jnp.arange(u.shape[1])[:, None] + jnp.arange(kw)[None, :]
+    win = up[:, idx]  # [B,S,kw,di]
+    return jnp.einsum("bskd,kd->bsd", win, p["conv_w"]), None
+
+
+SSM_CHUNK = 512  # remat granularity of the selective scan
+
+
+def _scan_chunk(cfg: ModelConfig, p, h0, u_chunk):
+    """One rematerialized chunk: recomputes dt/B/C and the [B,s,di,N]
+    discretized tensors inside, so the backward pass never stores them for
+    the whole sequence — only the per-chunk boundary state h [B,di,N]."""
+    a = -jnp.exp(p["a_log"])  # [di,N]
+    dt, bb, cc = _dbc(cfg, p, u_chunk)
+    uf = u_chunk.astype(jnp.float32)
+    da = jnp.exp(dt[..., None] * a)                          # [B,s,di,N]
+    dbu = dt[..., None] * bb[:, :, None, :] * uf[..., None]  # [B,s,di,N]
+
+    def step(h, inp):
+        da_t, dbu_t, c_t = inp
+        h = da_t * h + dbu_t
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    hf, ys = jax.lax.scan(
+        step, h0,
+        (da.transpose(1, 0, 2, 3), dbu.transpose(1, 0, 2, 3),
+         cc.transpose(1, 0, 2)))
+    y = ys.transpose(1, 0, 2) + uf * p["d_skip"]
+    return hf, y
+
+
+def ssm_scan(cfg: ModelConfig, p, u, h0=None, chunk: int = SSM_CHUNK):
+    """Selective scan. u [B,S,di] -> (y [B,S,di], h_final [B,di,N]).
+
+    The sequence is processed in rematerialized chunks (jax.checkpoint):
+    backward memory is O(S/chunk boundary states + one chunk's
+    intermediates) instead of O(S) discretized [B,S,di,N] tensors —
+    measured on hymba-1.5b train_4k in EXPERIMENTS.md §Perf fleet notes.
+    """
+    b, s, di = u.shape
+    n = cfg.ssm_state
+    h0 = jnp.zeros((b, di, n), jnp.float32) if h0 is None else h0
+    if s % chunk or s <= chunk:
+        hf, y = _scan_chunk(cfg, p, h0, u)
+        return y.astype(u.dtype), hf
+
+    nc = s // chunk
+    uc = u.reshape(b, nc, chunk, di).transpose(1, 0, 2, 3)  # [nc,B,c,di]
+
+    @jax.checkpoint
+    def body(h, u_c):
+        hf, y = _scan_chunk(cfg, p, h, u_c)
+        return hf, y
+
+    hf, ys = jax.lax.scan(body, h0, uc)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, di)
+    return y.astype(u.dtype), hf
+
+
+def ssm_forward(cfg: ModelConfig, p, x):
+    """Full-sequence mamba branch. x [B,S,D] -> [B,S,D]."""
+    u, z = jnp.split(x @ p["w_in"], 2, axis=-1)
+    u, _ = _conv_causal(p, u)
+    u = jax.nn.silu(u.astype(jnp.float32)).astype(x.dtype)
+    y, _ = ssm_scan(cfg, p, u)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return y @ p["w_out"]
+
+
+def ssm_init_cache(cfg: ModelConfig, batch: int):
+    di, n = d_inner(cfg), cfg.ssm_state
+    return {
+        "h": jnp.zeros((batch, di, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di), cfg.dt),
+    }
+
+
+def ssm_decode(cfg: ModelConfig, p, x, cache):
+    """One-token step. x [B,1,D]."""
+    u, z = jnp.split(x @ p["w_in"], 2, axis=-1)
+    u, conv = _conv_causal(p, u, conv_cache=cache["conv"])
+    u = jax.nn.silu(u.astype(jnp.float32)).astype(x.dtype)
+
+    dt, bb, cc = _dbc(cfg, p, u[:, 0])
+    a = -jnp.exp(p["a_log"])
+    da = jnp.exp(dt[..., None] * a)
+    uf = u[:, 0].astype(jnp.float32)
+    h = da * cache["h"] + dt[..., None] * bb[:, None, :] * uf[..., None]
+    y = jnp.einsum("bdn,bn->bd", h, cc) + uf * p["d_skip"]
+    y = y.astype(x.dtype)[:, None, :]
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return y @ p["w_out"], {"h": h, "conv": conv}

@@ -1,0 +1,390 @@
+"""The decoder backbone: dense / MoE / hybrid(attn+mamba) / rwkv / VLM,
+all driven by ``ModelConfig``.
+
+API (all pure functions):
+    init_params(cfg, key)                         -> params pytree
+    forward(cfg, params, tokens, img_embeds=None) -> (features, aux)
+    loss_fn(cfg, params, batch)                   -> (loss, metrics)
+    init_cache(cfg, batch, cache_len)             -> cache pytree (leading L)
+    prefill(cfg, params, tokens, ...)             -> (last_logits, cache)
+    decode_step(cfg, params, cache, tokens, pos)  -> (logits, cache)
+
+Layers are *stacked* (leading L axis) and traversed with ``lax.scan`` so that
+a 64-layer model compiles as one loop — essential for the 512-device dry-run.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import attention, hooks, layers, moe, rwkv, ssm
+from .base import ModelConfig
+
+
+# ==========================================================================
+# init
+def init_layer(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 8)
+    p = {"norm1": jnp.ones((cfg.d_model,), cfg.dt),
+         "norm2": jnp.ones((cfg.d_model,), cfg.dt)}
+    if cfg.rwkv:
+        p["time_mix"] = rwkv.init_time_mix(ks[0], cfg)
+        p["channel_mix"] = rwkv.init_channel_mix(ks[1], cfg)
+        return p
+    if cfg.attention == "mla":
+        p["attn"] = attention.init_mla(ks[0], cfg)
+    else:
+        p["attn"] = attention.init_gqa(ks[0], cfg)
+    if cfg.arch_type == "hybrid":
+        p["ssm"] = ssm.init_ssm(ks[1], cfg)
+        p["branch_norm_attn"] = jnp.ones((cfg.d_model,), cfg.dt)
+        p["branch_norm_ssm"] = jnp.ones((cfg.d_model,), cfg.dt)
+    if cfg.is_moe:
+        p["moe"] = moe.init_moe(ks[2], cfg)
+    else:
+        p["mlp"] = layers.init_swiglu(ks[2], cfg.d_model, cfg.d_ff, cfg.dt)
+    return p
+
+
+def init_params(cfg: ModelConfig, key):
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    stacked = jax.vmap(lambda k: init_layer(k, cfg))(layer_keys)
+    params = {
+        "embed": layers.embed_init(k_emb, cfg.vocab_size, cfg.d_model, cfg.dt),
+        "layers": stacked,
+        "final_norm": jnp.ones((cfg.d_model,), cfg.dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.dense_init(
+            k_head, cfg.d_model, cfg.vocab_size, cfg.dt, scale=0.02)
+    return params
+
+
+def lm_head_weight(cfg: ModelConfig, params):
+    if "lm_head" in params:  # explicit head (incl. FACADE-untied variants)
+        return params["lm_head"]
+    return params["embed"].T  # tied embeddings
+
+
+# ==========================================================================
+# blocks
+def block_forward(cfg: ModelConfig, lp, h, positions, attn_fn=None,
+                  force_window: int = 0):
+    """One layer, full sequence. Returns (h, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    window = force_window or cfg.sliding_window
+    if cfg.rwkv:
+        a = layers.rms_norm(h, lp["norm1"], cfg.norm_eps)
+        tm, _, _ = rwkv.time_mix(cfg, lp["time_mix"], a)
+        h = h + tm
+        m = layers.rms_norm(h, lp["norm2"], cfg.norm_eps)
+        cm, _ = rwkv.channel_mix(cfg, lp["channel_mix"], m)
+        return h + cm, aux
+
+    a = layers.rms_norm(h, lp["norm1"], cfg.norm_eps)
+    if cfg.attention == "mla":
+        attn_out = attention.mla_forward(cfg, lp["attn"], a, positions,
+                                         window=window)
+    else:
+        attn_out = attention.gqa_forward(cfg, lp["attn"], a, positions,
+                                         window=window, attn_fn=attn_fn)
+    if cfg.arch_type == "hybrid":
+        ssm_out = ssm.ssm_forward(cfg, lp["ssm"], a)
+        attn_out = 0.5 * (
+            layers.rms_norm(attn_out, lp["branch_norm_attn"], cfg.norm_eps)
+            + layers.rms_norm(ssm_out, lp["branch_norm_ssm"], cfg.norm_eps))
+    h = h + attn_out
+
+    m = layers.rms_norm(h, lp["norm2"], cfg.norm_eps)
+    if cfg.is_moe:
+        mo, a_loss = moe.moe_forward(cfg, lp["moe"], m)
+        aux = aux + a_loss
+        h = h + mo
+    else:
+        h = h + layers.swiglu(lp["mlp"], m)
+    return h, aux
+
+
+# ==========================================================================
+# full-sequence forward
+def embed_inputs(cfg: ModelConfig, params, tokens, img_embeds=None):
+    x = params["embed"][tokens]
+    if img_embeds is not None:
+        x = jnp.concatenate([img_embeds.astype(x.dtype), x], axis=1)
+    positions = jnp.broadcast_to(
+        jnp.arange(x.shape[1], dtype=jnp.int32)[None], x.shape[:2])
+    return x, positions
+
+
+def forward(cfg: ModelConfig, params, tokens, img_embeds=None,
+            remat: bool = False, attn_fn=None, apply_final_norm: bool = True):
+    """-> (features [B,S,D], aux). S includes image tokens for VLMs.
+    ``apply_final_norm=False`` returns pre-norm features (the FACADE core
+    output; the per-cluster head owns the final norm)."""
+    h, positions = embed_inputs(cfg, params, tokens, img_embeds)
+
+    def body(carry, lp):
+        h, aux = carry
+        h = hooks.shard_batch(h)
+        h, a = block_forward(cfg, lp, h, positions, attn_fn=attn_fn)
+        return (h, aux + a), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (h, aux), _ = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)),
+                               params["layers"], unroll=cfg.scan_unroll)
+    if apply_final_norm:
+        h = layers.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return h, aux
+
+
+# ==========================================================================
+# loss (sequence-chunked CE so [B,S,V] fp32 logits never materialize)
+def chunked_ce(features, w_head, labels, mask, chunk: int = 512,
+               unroll: int = 1):
+    """features [B,S,D]; labels/mask [B,S]. Mean NLL over masked tokens,
+    plus accuracy. Chunks the sequence axis; each chunk is rematerialized in
+    the backward pass (jax.checkpoint) so logit residuals never exceed
+    [B,chunk,V]."""
+    b, s, d = features.shape
+    n_chunks = max(1, s // chunk)
+    chunk = s // n_chunks if s % n_chunks == 0 else s  # fallback: one chunk
+    n_chunks = s // chunk
+
+    fc = features.reshape(b, n_chunks, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+    mc = mask.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def one(f, l, m):
+        logits = (f @ w_head).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        # gold logit via compare-mask reduction, NOT take_along_axis: a
+        # gather on the (model-sharded) vocab dim makes GSPMD all-gather
+        # full [B,chunk,V] logits; the masked sum partitions cleanly.
+        onehot = l[..., None] == jax.lax.broadcasted_iota(
+            jnp.int32, logits.shape, logits.ndim - 1)
+        gold = jnp.where(onehot, logits, 0.0).sum(axis=-1)
+        correct = (jnp.max(logits, axis=-1) <= gold).astype(jnp.float32)
+        return ((lse - gold) * m).sum(), (correct * m).sum()
+
+    def body(carry, xs):
+        nll, acc = carry
+        f, l, m = xs
+        dn, da = one(f, l, m)
+        return (nll + dn, acc + da), None
+
+    (nll, acc), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+                                 (fc, lc, mc), unroll=unroll)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return nll / denom, acc / denom
+
+
+def loss_fn(cfg: ModelConfig, params, batch, remat: bool = False,
+            attn_fn=None):
+    """batch: {tokens [B,S], labels [B,S], mask [B,S], img_embeds?}."""
+    feats, aux = forward(cfg, params, batch["tokens"],
+                         img_embeds=batch.get("img_embeds"),
+                         remat=remat, attn_fn=attn_fn)
+    n_img = 0 if batch.get("img_embeds") is None else batch["img_embeds"].shape[1]
+    feats = feats[:, n_img:]
+    loss, acc = chunked_ce(feats, lm_head_weight(cfg, params),
+                           batch["labels"], batch["mask"].astype(jnp.float32),
+                           unroll=cfg.scan_unroll)
+    total = loss + cfg.router_aux_coef * aux
+    return total, {"ce": loss, "aux": aux, "acc": acc}
+
+
+# ==========================================================================
+# caches
+def _layer_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    if cfg.rwkv:
+        return rwkv.rwkv_init_cache(cfg, batch)
+    if cfg.attention == "mla":
+        c = attention.mla_init_cache(cfg, batch, cache_len)
+    else:
+        c = attention.gqa_init_cache(cfg, batch, cache_len)
+    if cfg.arch_type == "hybrid":
+        c = {"attn": c, "ssm": ssm.ssm_init_cache(cfg, batch)}
+    return c
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    one = _layer_cache(cfg, batch, cache_len)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape), one)
+
+
+def extend_cache(cfg: ModelConfig, caches, extra: int):
+    """Append ``extra`` empty slots to a prefilled cache so subsequent
+    decode steps have somewhere to write. No-op for ring-buffer (sliding
+    window) caches, where wraparound eviction is the semantics, and for
+    state-only (rwkv) caches."""
+    if extra <= 0 or cfg.rwkv:
+        return caches
+
+    def pad(leaf, slot_axis, fill):
+        pads = [(0, 0)] * leaf.ndim
+        pads[slot_axis] = (0, extra)
+        return jnp.pad(leaf, pads, constant_values=fill)
+
+    def pad_attn(c):
+        if cfg.sliding_window and c["slot_pos"].shape[-1] == cfg.sliding_window:
+            return c  # ring buffer: leave alone
+        out = {}
+        for name, leaf in c.items():
+            if name == "slot_pos":
+                out[name] = pad(leaf, leaf.ndim - 1, -1)
+            else:
+                out[name] = pad(leaf, 2, 0)  # [L,B,slots,...]
+        return out
+
+    if cfg.arch_type == "hybrid":
+        return {"attn": pad_attn(caches["attn"]), "ssm": caches["ssm"]}
+    return pad_attn(caches)
+
+
+def cache_physical_len(cfg: ModelConfig, seq_len: int) -> int:
+    """Sliding-window archs store the ring-buffer window as the physical
+    cache (production SWA representation); others store seq_len slots."""
+    if cfg.rwkv:
+        return 1  # state-only; attn cache unused
+    if cfg.sliding_window and seq_len > cfg.sliding_window:
+        return cfg.sliding_window
+    return seq_len
+
+
+# ==========================================================================
+# decode
+def block_decode(cfg: ModelConfig, lp, h, pos, cache):
+    window = cfg.sliding_window
+    if cfg.rwkv:
+        a = layers.rms_norm(h, lp["norm1"], cfg.norm_eps)
+        tm, s_new, tmx = rwkv.time_mix(cfg, lp["time_mix"], a,
+                                       state=cache["s"], last_x=cache["tm_x"])
+        h = h + tm
+        m = layers.rms_norm(h, lp["norm2"], cfg.norm_eps)
+        cm, cmx = rwkv.channel_mix(cfg, lp["channel_mix"], m,
+                                   last_x=cache["cm_x"])
+        return h + cm, {"s": s_new, "tm_x": tmx, "cm_x": cmx}
+
+    a = layers.rms_norm(h, lp["norm1"], cfg.norm_eps)
+    attn_cache = cache["attn"] if cfg.arch_type == "hybrid" else cache
+    if cfg.attention == "mla":
+        attn_out, new_attn = attention.mla_decode(cfg, lp["attn"], a, pos,
+                                                  attn_cache, window=window)
+    else:
+        attn_out, new_attn = attention.gqa_decode(cfg, lp["attn"], a, pos,
+                                                  attn_cache, window=window)
+    if cfg.arch_type == "hybrid":
+        ssm_out, new_ssm = ssm.ssm_decode(cfg, lp["ssm"], a, cache["ssm"])
+        attn_out = 0.5 * (
+            layers.rms_norm(attn_out, lp["branch_norm_attn"], cfg.norm_eps)
+            + layers.rms_norm(ssm_out, lp["branch_norm_ssm"], cfg.norm_eps))
+        new_cache = {"attn": new_attn, "ssm": new_ssm}
+    else:
+        new_cache = new_attn
+    h = h + attn_out
+
+    m = layers.rms_norm(h, lp["norm2"], cfg.norm_eps)
+    if cfg.is_moe:
+        mo, _ = moe.moe_forward(cfg, lp["moe"], m)
+        h = h + mo
+    else:
+        h = h + layers.swiglu(lp["mlp"], m)
+    return h, new_cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    """tokens [B,1] int32; pos [B] int32 -> (logits [B,V], new cache)."""
+    h = params["embed"][tokens]
+
+    def body(h, xs):
+        lp, lc = xs
+        h, nc = block_decode(cfg, lp, h, pos, lc)
+        return h, nc
+
+    h, new_caches = jax.lax.scan(body, h, (params["layers"], cache),
+                                 unroll=cfg.scan_unroll)
+    feats = layers.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = (feats[:, 0] @ lm_head_weight(cfg, params)).astype(jnp.float32)
+    return logits, new_caches
+
+
+# ==========================================================================
+# prefill: full forward that also materializes the decode cache
+def prefill(cfg: ModelConfig, params, tokens, img_embeds=None,
+            cache_extra: int = 0):
+    """-> (last-token logits [B,V], cache ready for decode at pos=S).
+    ``cache_extra`` reserves empty slots for tokens generated afterwards."""
+    h, positions = embed_inputs(cfg, params, tokens, img_embeds)
+    b, s = h.shape[:2]
+    cache_len = cache_physical_len(cfg, s)
+
+    def body(h, lp):
+        h = hooks.shard_batch(h)
+        a = layers.rms_norm(h, lp["norm1"], cfg.norm_eps)
+        if cfg.rwkv:
+            tm, s_new, tmx = rwkv.time_mix(cfg, lp["time_mix"], a)
+            h = h + tm
+            m = layers.rms_norm(h, lp["norm2"], cfg.norm_eps)
+            cm, cmx = rwkv.channel_mix(cfg, lp["channel_mix"], m)
+            return h + cm, {"s": s_new, "tm_x": tmx, "cm_x": cmx}
+
+        window = cfg.sliding_window
+        if cfg.attention == "mla":
+            c_kv, k_rope = attention._mla_ckv(cfg, lp["attn"], a, positions)
+            attn_out = attention.mla_forward(cfg, lp["attn"], a, positions,
+                                             window=window)
+            kv = {"c_kv": c_kv, "k_rope": k_rope}
+        else:
+            q, k, v = attention._gqa_qkv(cfg, lp["attn"], a, positions)
+            attn_out = attention.sdpa_auto(q, k, v, positions, positions,
+                                           window=window,
+                                           unroll=cfg.scan_unroll)
+            attn_out = (attn_out.reshape(b, s, -1).astype(h.dtype)
+                        @ lp["attn"]["wo"])
+            kv = {"k": k, "v": v}
+
+        # ring-buffer placement: slot j holds position start + ((j-start)%W)
+        start = s - cache_len
+        slots = jnp.arange(cache_len, dtype=jnp.int32)
+        src = start + ((slots - start) % cache_len)
+        kv = jax.tree.map(lambda a_: a_[:, src], kv)
+        kv["slot_pos"] = jnp.broadcast_to(src[None], (b, cache_len))
+
+        if cfg.arch_type == "hybrid":
+            ssm_out = ssm.ssm_forward(cfg, lp["ssm"], a)
+            # re-run scan pieces to extract final ssm state
+            u, _ = jnp.split(a @ lp["ssm"]["w_in"], 2, axis=-1)
+            uc, _ = ssm._conv_causal(lp["ssm"], u)
+            uc = jax.nn.silu(uc.astype(jnp.float32)).astype(a.dtype)
+            _, h_ssm = ssm.ssm_scan(cfg, lp["ssm"], uc)
+            conv_tail = jnp.concatenate(
+                [jnp.zeros((b, cfg.ssm_conv - 1, u.shape[-1]), u.dtype),
+                 u], axis=1)[:, -(cfg.ssm_conv - 1):]
+            attn_out = 0.5 * (
+                layers.rms_norm(attn_out, lp["branch_norm_attn"], cfg.norm_eps)
+                + layers.rms_norm(ssm_out, lp["branch_norm_ssm"], cfg.norm_eps))
+            cache_l = {"attn": kv, "ssm": {"h": h_ssm, "conv": conv_tail}}
+        else:
+            cache_l = kv
+        h = h + attn_out
+
+        m = layers.rms_norm(h, lp["norm2"], cfg.norm_eps)
+        if cfg.is_moe:
+            mo, _ = moe.moe_forward(cfg, lp["moe"], m)
+            h = h + mo
+        else:
+            h = h + layers.swiglu(lp["mlp"], m)
+        return h, cache_l
+
+    h, caches = jax.lax.scan(body, h, params["layers"],
+                             unroll=cfg.scan_unroll)
+    caches = extend_cache(cfg, caches, cache_extra)
+    feats = layers.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = (feats[:, -1] @ lm_head_weight(cfg, params)).astype(jnp.float32)
+    return logits, caches

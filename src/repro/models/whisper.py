@@ -1,0 +1,211 @@
+"""Whisper-style encoder-decoder transformer backbone [arXiv:2212.04356].
+
+Per the assignment carve-out, the mel-spectrogram + conv feature extractor is
+a STUB: ``input_specs()`` hands the encoder precomputed frame embeddings
+``[B, S_enc, d_model]``. This module implements the transformer itself:
+bidirectional encoder, causal decoder with cross-attention, tied lm head,
+prefill/decode with self- and cross-attention caches.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention, layers
+from .base import ModelConfig
+
+
+def sinusoids(length: int, channels: int):
+    t = jnp.arange(length, dtype=jnp.float32)[:, None]
+    inv = jnp.exp(-jnp.arange(channels // 2, dtype=jnp.float32)
+                  * (jnp.log(10000.0) / (channels // 2 - 1)))
+    ang = t * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _init_mha(key, cfg: ModelConfig):
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    return {"wq": layers.dense_init(ks[0], d, d, cfg.dt),
+            "wk": layers.dense_init(ks[1], d, d, cfg.dt),
+            "wv": layers.dense_init(ks[2], d, d, cfg.dt),
+            "wo": layers.dense_init(ks[3], d, d, cfg.dt)}
+
+
+def _mha(cfg: ModelConfig, p, xq, xkv, q_pos, kv_pos, causal: bool):
+    b, sq, d = xq.shape
+    h = cfg.n_heads
+    hd = d // h
+    q = (xq @ p["wq"]).reshape(b, sq, h, hd)
+    k = (xkv @ p["wk"]).reshape(b, xkv.shape[1], h, hd)
+    v = (xkv @ p["wv"]).reshape(b, xkv.shape[1], h, hd)
+    if not causal:  # bidirectional: make every kv slot visible
+        kv_pos = jnp.zeros_like(kv_pos)
+        q_pos = jnp.ones_like(q_pos)
+    out = attention.sdpa(q, k, v, q_pos, kv_pos)
+    return out.reshape(b, sq, d).astype(xq.dtype) @ p["wo"]
+
+
+def _ln(cfg, x, p):
+    return layers.layer_norm(x, p["g"], p["b"], cfg.norm_eps)
+
+
+def _init_ln(cfg):
+    return {"g": jnp.ones((cfg.d_model,), cfg.dt),
+            "b": jnp.zeros((cfg.d_model,), cfg.dt)}
+
+
+def init_enc_layer(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": _init_ln(cfg), "attn": _init_mha(k1, cfg),
+            "ln2": _init_ln(cfg),
+            "mlp": layers.init_gelu_mlp(k2, cfg.d_model, cfg.d_ff, cfg.dt)}
+
+
+def init_dec_layer(key, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": _init_ln(cfg), "self_attn": _init_mha(k1, cfg),
+            "ln2": _init_ln(cfg), "cross_attn": _init_mha(k2, cfg),
+            "ln3": _init_ln(cfg),
+            "mlp": layers.init_gelu_mlp(k3, cfg.d_model, cfg.d_ff, cfg.dt)}
+
+
+def init_params(cfg: ModelConfig, key):
+    ke, kd, kemb, kp = jax.random.split(key, 4)
+    enc_keys = jax.random.split(ke, cfg.encoder_layers)
+    dec_keys = jax.random.split(kd, cfg.n_layers)
+    return {
+        "encoder": {
+            "layers": jax.vmap(lambda k: init_enc_layer(k, cfg))(enc_keys),
+            "ln_post": _init_ln(cfg),
+        },
+        "decoder": {
+            "pos_embed": (jax.random.normal(
+                kp, (cfg.max_decoder_len, cfg.d_model)) * 0.01).astype(cfg.dt),
+            "layers": jax.vmap(lambda k: init_dec_layer(k, cfg))(dec_keys),
+        },
+        "embed": layers.embed_init(kemb, cfg.vocab_size, cfg.d_model, cfg.dt),
+        "final_norm": _init_ln(cfg),
+    }
+
+
+# ==========================================================================
+def encode(cfg: ModelConfig, params, frames):
+    """frames [B, S_enc, D] (stubbed conv features) -> [B, S_enc, D]."""
+    b, s, d = frames.shape
+    h = frames.astype(cfg.dt) + sinusoids(s, d).astype(cfg.dt)[None]
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(h, lp):
+        a = _ln(cfg, h, lp["ln1"])
+        h = h + _mha(cfg, lp["attn"], a, a, pos, pos, causal=False)
+        m = _ln(cfg, h, lp["ln2"])
+        return h + layers.gelu_mlp(lp["mlp"], m), None
+
+    h, _ = jax.lax.scan(body, h, params["encoder"]["layers"],
+                        unroll=cfg.scan_unroll)
+    return _ln(cfg, h, params["encoder"]["ln_post"])
+
+
+def lm_head_weight(params):
+    return params["lm_head"] if "lm_head" in params else params["embed"].T
+
+
+def forward(cfg: ModelConfig, params, tokens, frames, remat: bool = False,
+            apply_final_norm: bool = True):
+    """Teacher-forced decode over full target. -> (features, aux=0)."""
+    enc = encode(cfg, params, frames)
+    b, s = tokens.shape
+    h = params["embed"][tokens] + params["decoder"]["pos_embed"][None, :s]
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    epos = jnp.broadcast_to(
+        jnp.arange(enc.shape[1], dtype=jnp.int32)[None], enc.shape[:2])
+
+    def body(h, lp):
+        a = _ln(cfg, h, lp["ln1"])
+        h = h + _mha(cfg, lp["self_attn"], a, a, pos, pos, causal=True)
+        c = _ln(cfg, h, lp["ln2"])
+        h = h + _mha(cfg, lp["cross_attn"], c, enc, pos, epos, causal=False)
+        m = _ln(cfg, h, lp["ln3"])
+        return h + layers.gelu_mlp(lp["mlp"], m), None
+
+    body = jax.checkpoint(body, prevent_cse=False) if remat else body
+    h, _ = jax.lax.scan(body, h, params["decoder"]["layers"],
+                        unroll=cfg.scan_unroll)
+    if apply_final_norm:
+        h = _ln(cfg, h, params["final_norm"])
+    return h, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(cfg: ModelConfig, params, batch, remat: bool = False):
+    feats, aux = forward(cfg, params, batch["tokens"], batch["frames"],
+                         remat=remat)
+    from .transformer import chunked_ce
+    loss, acc = chunked_ce(feats, lm_head_weight(params), batch["labels"],
+                           batch["mask"].astype(jnp.float32),
+                           unroll=cfg.scan_unroll)
+    return loss, {"ce": loss, "aux": aux, "acc": acc}
+
+
+# ==========================================================================
+# serving: cross k/v precomputed once; decoder self-attn cache per layer
+def init_cache(cfg: ModelConfig, params, frames, batch: int, cache_len: int):
+    enc = encode(cfg, params, frames)
+    d, h = cfg.d_model, cfg.n_heads
+
+    def cross_kv(lp):
+        k = (enc @ lp["cross_attn"]["wk"]).reshape(
+            batch, enc.shape[1], h, d // h)
+        v = (enc @ lp["cross_attn"]["wv"]).reshape(
+            batch, enc.shape[1], h, d // h)
+        return {"k": k, "v": v}
+
+    cross = jax.vmap(cross_kv)(params["decoder"]["layers"])
+    self_c = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape),
+        {"k": jnp.zeros((batch, cache_len, h, d // h), cfg.dt),
+         "v": jnp.zeros((batch, cache_len, h, d // h), cfg.dt),
+         "slot_pos": jnp.full((batch, cache_len), -1, jnp.int32)})
+    return {"self": self_c, "cross": cross}
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    """tokens [B,1], pos [B] -> (logits [B,V], new cache)."""
+    b = tokens.shape[0]
+    d, nh = cfg.d_model, cfg.n_heads
+    hd = d // nh
+    pe = params["decoder"]["pos_embed"][
+        jnp.minimum(pos, cfg.max_decoder_len - 1)]
+    h = params["embed"][tokens] + pe[:, None, :]
+
+    def body(h, xs):
+        lp, sc, cc = xs
+        a = _ln(cfg, h, lp["ln1"])
+        q = (a @ lp["self_attn"]["wq"]).reshape(b, 1, nh, hd)
+        k = (a @ lp["self_attn"]["wk"]).reshape(b, 1, nh, hd)
+        v = (a @ lp["self_attn"]["wv"]).reshape(b, 1, nh, hd)
+        cache_len = sc["k"].shape[1]
+        slot = (pos % cache_len).astype(jnp.int32)
+        onehot = jax.nn.one_hot(slot, cache_len, dtype=cfg.dt)
+        ck = sc["k"] * (1 - onehot)[:, :, None, None] + onehot[:, :, None, None] * k
+        cv = sc["v"] * (1 - onehot)[:, :, None, None] + onehot[:, :, None, None] * v
+        sp = jnp.where(onehot.astype(bool), pos[:, None], sc["slot_pos"])
+        out = attention.sdpa(q, ck, cv, pos[:, None], sp)
+        h = h + out.reshape(b, 1, d).astype(h.dtype) @ lp["self_attn"]["wo"]
+
+        c = _ln(cfg, h, lp["ln2"])
+        qc = (c @ lp["cross_attn"]["wq"]).reshape(b, 1, nh, hd)
+        epos = jnp.zeros((b, cc["k"].shape[1]), jnp.int32)
+        out = attention.sdpa(qc, cc["k"], cc["v"],
+                             jnp.ones((b, 1), jnp.int32), epos)
+        h = h + out.reshape(b, 1, d).astype(h.dtype) @ lp["cross_attn"]["wo"]
+
+        m = _ln(cfg, h, lp["ln3"])
+        h = h + layers.gelu_mlp(lp["mlp"], m)
+        return h, {"k": ck, "v": cv, "slot_pos": sp}
+
+    h, new_self = jax.lax.scan(
+        body, h, (params["decoder"]["layers"], cache["self"], cache["cross"]))
+    feats = _ln(cfg, h, params["final_norm"])
+    logits = (feats[:, 0] @ lm_head_weight(params)).astype(jnp.float32)
+    return logits, {"self": new_self, "cross": cache["cross"]}

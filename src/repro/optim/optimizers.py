@@ -1,0 +1,95 @@
+"""Minimal pytree optimizers (pure JAX; no optax in this container).
+
+Each optimizer is a (init, update) pair:
+    opt.init(params)                     -> opt_state
+    opt.update(grads, state, params)     -> (updates, new_state)
+apply_updates(params, updates)           -> params - updates already scaled.
+
+``slot_dtype`` lets gigantic configs (grok-1) keep momentum in bf16 to fit
+HBM (see DESIGN.md §7); defaults to fp32 slots.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params) -> (updates, state)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p - u).astype(p.dtype), params, updates)
+
+
+def _lr_at(lr, count):
+    return lr(count) if callable(lr) else lr
+
+
+def sgd(lr) -> Optimizer:
+    def init(params):
+        return {"count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        step = _lr_at(lr, state["count"])
+        ups = jax.tree.map(lambda g: step * g.astype(jnp.float32), grads)
+        return ups, {"count": state["count"] + 1}
+
+    return Optimizer(init, update)
+
+
+def momentum(lr, beta: float = 0.9, slot_dtype=jnp.float32) -> Optimizer:
+    def init(params):
+        return {"count": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, slot_dtype), params)}
+
+    def update(grads, state, params=None):
+        m = jax.tree.map(
+            lambda mm, g: (beta * mm.astype(jnp.float32)
+                           + g.astype(jnp.float32)).astype(slot_dtype),
+            state["m"], grads)
+        step = _lr_at(lr, state["count"])
+        ups = jax.tree.map(lambda mm: step * mm.astype(jnp.float32), m)
+        return ups, {"count": state["count"] + 1, "m": m}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0, slot_dtype=jnp.float32) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, slot_dtype)
+        return {"count": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(z, params),
+                "v": jax.tree.map(z, params)}
+
+    def update(grads, state, params):
+        c = state["count"] + 1
+        m = jax.tree.map(
+            lambda mm, g: (b1 * mm.astype(jnp.float32)
+                           + (1 - b1) * g.astype(jnp.float32)
+                           ).astype(slot_dtype), state["m"], grads)
+        v = jax.tree.map(
+            lambda vv, g: (b2 * vv.astype(jnp.float32)
+                           + (1 - b2) * jnp.square(g.astype(jnp.float32))
+                           ).astype(slot_dtype), state["v"], grads)
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+        step = _lr_at(lr, state["count"])
+
+        def upd(mm, vv, p):
+            mhat = mm.astype(jnp.float32) / bc1
+            vhat = vv.astype(jnp.float32) / bc2
+            u = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return step * u
+
+        ups = jax.tree.map(upd, m, v, params)
+        return ups, {"count": c, "m": m, "v": v}
+
+    return Optimizer(init, update)

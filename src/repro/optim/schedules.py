@@ -1,0 +1,21 @@
+"""Learning-rate schedules (callables over the step count)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    return lambda count: jnp.asarray(value, jnp.float32)
+
+
+def cosine_warmup(peak: float, warmup_steps: int, total_steps: int,
+                  floor: float = 0.0):
+    def sched(count):
+        c = count.astype(jnp.float32)
+        warm = peak * jnp.minimum(1.0, c / max(warmup_steps, 1))
+        prog = jnp.clip((c - warmup_steps) / max(total_steps - warmup_steps, 1),
+                        0.0, 1.0)
+        cos = floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(c < warmup_steps, warm, cos)
+
+    return sched

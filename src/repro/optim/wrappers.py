@@ -1,0 +1,85 @@
+"""Production optimizer wrappers: master-weight mixed precision, gradient
+clipping, and gradient accumulation (microbatching).
+
+``master_weights(opt)`` keeps an fp32 master copy of bf16 params in the
+optimizer state — the standard mixed-precision recipe: bf16 forward/
+backward, fp32 update, params re-cast from the master each step (no drift
+from repeated bf16 rounding).
+
+``clip_by_global_norm`` composes in front of any optimizer.
+
+``accumulate_gradients(loss_fn, params, batches)`` folds a leading
+microbatch axis with lax.scan — the memory knob for train_4k-sized global
+batches that don't fit activations at once.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .optimizers import Optimizer
+
+
+def master_weights(opt: Optimizer) -> Optimizer:
+    """Wrap ``opt`` with fp32 master params. update() returns *delta* to be
+    applied via apply_updates as usual, but params are reconstructed from
+    the master copy so bf16 rounding never accumulates."""
+
+    def init(params):
+        return {
+            "inner": opt.init(params),
+            "master": jax.tree.map(
+                lambda p: p.astype(jnp.float32), params),
+        }
+
+    def update(grads, state, params):
+        ups, inner = opt.update(grads, state["inner"], state["master"])
+        master = jax.tree.map(lambda mp, u: mp - u.astype(jnp.float32),
+                              state["master"], ups)
+        # delta that takes current (bf16) params exactly onto cast(master)
+        delta = jax.tree.map(
+            lambda p, mp: (p.astype(jnp.float32) - mp), params, master)
+        return delta, {"inner": inner, "master": master}
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(opt: Optimizer, max_norm: float) -> Optimizer:
+    def init(params):
+        return opt.init(params)
+
+    def update(grads, state, params):
+        sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                 for g in jax.tree.leaves(grads))
+        norm = jnp.sqrt(sq)
+        scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+        grads = jax.tree.map(
+            lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads)
+        return opt.update(grads, state, params)
+
+    return Optimizer(init, update)
+
+
+def accumulate_gradients(loss_fn, params, batches, unroll: int = 1):
+    """Mean loss + grads over a leading microbatch axis.
+
+    batches: pytree with leading [n_micro, ...]. Returns
+    ((loss, aux_of_last_micro), grads) matching
+    jax.value_and_grad(..., has_aux=True) conventions.
+    """
+    n = jax.tree.leaves(batches)[0].shape[0]
+    gfn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def body(carry, micro):
+        loss_acc, g_acc = carry
+        (loss, aux), g = gfn(params, micro)
+        g_acc = jax.tree.map(
+            lambda a, b: a + b.astype(jnp.float32) / n, g_acc, g)
+        return (loss_acc + loss / n, g_acc), aux
+
+    g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (loss, grads), aux = jax.lax.scan(body, (jnp.zeros(()), g0), batches,
+                                      unroll=unroll)
+    aux_last = jax.tree.map(lambda a: a[-1], aux)
+    grads = jax.tree.map(lambda g, p: g.astype(p.dtype), grads, params)
+    return (loss, aux_last), grads

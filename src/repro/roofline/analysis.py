@@ -1,0 +1,157 @@
+"""Roofline-term derivation from a compiled (dry-run) XLA executable.
+
+Three terms, each a lower-bound execution time in seconds on the target
+hardware (TPU v5e constants live in ``launch.mesh.HW``):
+
+    compute    = HLO_FLOPs      / (chips * peak_FLOP/s)
+    memory     = HLO_bytes      / (chips * HBM_bw)
+    collective = collective_B   / (chips * link_bw)
+
+``cost_analysis()`` reports per-device FLOPs/bytes for the SPMD-partitioned
+module, so we multiply back by chip count where needed — the convention here
+is: cost_analysis numbers are PER DEVICE (post-partitioning), and the terms
+divide per-device work by per-chip peak. collective bytes are parsed from the
+optimized HLO text (cost_analysis does not expose them).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                   "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c128": 16,
+}
+
+# shapes like  bf16[2,16,128]{2,1,0}  or  f32[] (scalar)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    nb = _DTYPE_BYTES.get(dtype)
+    if nb is None:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * nb
+
+
+def parse_shape_list(text: str) -> int:
+    """Total bytes of every shape literal in an HLO type string
+    (handles tuple types '(bf16[..], f32[..])')."""
+    return sum(_shape_bytes(m.group(1), m.group(2))
+               for m in _SHAPE_RE.finditer(text))
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Sum result-operand bytes of every collective op in an HLO module.
+
+    Returns {op_name: bytes, ..., 'total': bytes, 'count': n_ops}.
+    HLO instruction form:  %name = TYPE opcode(args), ...
+    """
+    out = {op: 0 for op in _COLLECTIVE_OPS}
+    counts = {op: 0 for op in _COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+                     r"([a-z\-]+)", line)
+        if not m:
+            continue
+        opcode = m.group(2)
+        # match exact collective opcodes (all-gather-start etc. count once)
+        for op in _COLLECTIVE_OPS:
+            if opcode == op or opcode == op + "-start":
+                out[op] += parse_shape_list(m.group(1))
+                counts[op] += 1
+                break
+    total = sum(out.values())
+    return {**out, "total": total,
+            "count": sum(counts.values()), "counts": counts}
+
+
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float          # per-device
+    hlo_bytes: float          # per-device HBM traffic estimate
+    collective_bytes: float   # per-device bytes moved over ICI
+    collective_counts: dict
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    model_flops: float        # 6·N·D useful flops (global)
+    bytes_per_device: float   # from memory_analysis (peak allocation)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / global HLO_FLOPs — how much compiled compute is
+        'useful' model math (catches remat/dead-code waste)."""
+        tot = self.hlo_flops * self.chips
+        return self.model_flops / tot if tot else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective, "dominant": self.dominant,
+            "hlo_gflops_per_dev": self.hlo_flops / 1e9,
+            "hlo_gbytes_per_dev": self.hlo_bytes / 1e9,
+            "coll_gbytes_per_dev": self.collective_bytes / 1e9,
+            "model_gflops": self.model_flops / 1e9,
+            "useful_ratio": self.useful_ratio,
+            "peak_gbytes_per_dev": self.bytes_per_device / 1e9,
+        }
+
+
+def model_flops(n_params_active: int, n_tokens: int, kind: str) -> float:
+    """6·N·D for training; 2·N·D for inference fwd-only."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * float(n_params_active) * float(n_tokens)
+
+
+def analyze_compiled(compiled, *, arch: str, shape: str, mesh_name: str,
+                     chips: int, hw: dict, n_params_active: int,
+                     n_tokens: int, kind: str) -> RooflineReport:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+
+    hlo = compiled.as_text()
+    coll = collective_bytes_from_hlo(hlo)
+
+    mem = compiled.memory_analysis()
+    peak = 0.0
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes"):
+        peak += float(getattr(mem, attr, 0.0) or 0.0)
+
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=flops, hlo_bytes=bytes_accessed,
+        collective_bytes=float(coll["total"]),
+        collective_counts=coll["counts"],
+        t_compute=flops / hw["peak_flops_bf16"],
+        t_memory=bytes_accessed / hw["hbm_bw"],
+        t_collective=float(coll["total"]) / hw["ici_bw"],
+        model_flops=model_flops(n_params_active, n_tokens, kind),
+        bytes_per_device=peak,
+    )

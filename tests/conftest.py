@@ -1,0 +1,40 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests must see 1 CPU device
+(the 512-device mesh is exclusively the dry-run's business)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+# make sure the arch registry is populated for every test module
+import repro.configs  # noqa: F401
+
+ALL_ARCHS = [
+    "minicpm3-4b", "grok-1-314b", "deepseek-moe-16b", "hymba-1.5b",
+    "stablelm-12b", "llava-next-34b", "whisper-tiny", "qwen3-8b",
+    "llama3.2-1b", "rwkv6-1.6b",
+]
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def lm_smoke_batch(cfg, b=2, s=64, key=None):
+    """Batch dict for any backbone's smoke config."""
+    key = jax.random.PRNGKey(7) if key is None else key
+    k1, k2 = jax.random.split(key)
+    batch = {
+        "tokens": jax.random.randint(k1, (b, s), 0, cfg.vocab_size,
+                                     dtype=jnp.int32),
+        "labels": jax.random.randint(k2, (b, s), 0, cfg.vocab_size,
+                                     dtype=jnp.int32),
+        "mask": jnp.ones((b, s), jnp.float32),
+    }
+    if cfg.arch_type == "vlm":
+        batch["img_embeds"] = 0.02 * jax.random.normal(
+            k1, (b, cfg.n_image_tokens, cfg.d_model), cfg.dt)
+    if cfg.encoder_layers > 0:
+        batch["frames"] = 0.02 * jax.random.normal(
+            k1, (b, cfg.encoder_seq, cfg.d_model), cfg.dt)
+    return batch

@@ -1,0 +1,94 @@
+"""Per-architecture smoke tests (assignment deliverable f).
+
+Each assigned architecture instantiates its REDUCED config (<=4 layers,
+d_model<=512, <=4 experts) and runs one forward + one train step on CPU,
+asserting output shapes and finiteness.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import ALL_ARCHS, lm_smoke_batch
+from repro.models import api
+from repro.models.base import get_config
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_config_is_reduced(arch):
+    cfg = get_config(arch, smoke=True)
+    assert cfg.n_layers <= 4
+    assert cfg.d_model <= 512
+    if cfg.n_experts:
+        assert cfg.n_experts <= 4
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_forward_and_loss(arch):
+    cfg = get_config(arch, smoke=True)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    batch = lm_smoke_batch(cfg)
+    loss, metrics = api.loss_fn(cfg, params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss))
+    assert np.isfinite(float(metrics["acc"]))
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_one_train_step(arch):
+    """One SGD step must change params and keep everything finite."""
+    cfg = get_config(arch, smoke=True)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    batch = lm_smoke_batch(cfg)
+
+    @jax.jit
+    def step(p):
+        loss, g = jax.value_and_grad(
+            lambda q: api.loss_fn(cfg, q, batch)[0])(p)
+        p2 = jax.tree.map(lambda w, gg: w - 0.01 * gg.astype(w.dtype), p, g)
+        return loss, p2
+
+    loss, params2 = step(params)
+    assert np.isfinite(float(loss))
+    leaves1, leaves2 = jax.tree.leaves(params), jax.tree.leaves(params2)
+    changed = any(not np.allclose(np.asarray(a, np.float32),
+                                  np.asarray(b, np.float32))
+                  for a, b in zip(leaves1, leaves2))
+    assert changed
+    assert all(np.all(np.isfinite(np.asarray(l, np.float32)))
+               for l in leaves2)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_full_config_matches_assignment(arch):
+    """The FULL configs must carry the exact assigned hyperparameters."""
+    expected = {
+        "minicpm3-4b": dict(n_layers=62, d_model=2560, n_heads=40,
+                            n_kv_heads=40, d_ff=6400, vocab_size=73448),
+        "grok-1-314b": dict(n_layers=64, d_model=6144, n_heads=48,
+                            n_kv_heads=8, d_ff=32768, vocab_size=131072,
+                            n_experts=8, experts_per_token=2),
+        "deepseek-moe-16b": dict(n_layers=28, d_model=2048, n_heads=16,
+                                 n_kv_heads=16, d_ff=1408,
+                                 vocab_size=102400, n_experts=64,
+                                 experts_per_token=6, n_shared_experts=2),
+        "hymba-1.5b": dict(n_layers=32, d_model=1600, n_heads=25,
+                           n_kv_heads=5, d_ff=5504, vocab_size=32001,
+                           ssm_state=16),
+        "stablelm-12b": dict(n_layers=40, d_model=5120, n_heads=32,
+                             n_kv_heads=8, d_ff=13824, vocab_size=100352),
+        "llava-next-34b": dict(n_layers=60, d_model=7168, n_heads=56,
+                               n_kv_heads=8, d_ff=20480, vocab_size=64000),
+        "whisper-tiny": dict(n_layers=4, d_model=384, n_heads=6,
+                             n_kv_heads=6, d_ff=1536, vocab_size=51865),
+        "qwen3-8b": dict(n_layers=36, d_model=4096, n_heads=32,
+                         n_kv_heads=8, d_ff=12288, vocab_size=151936,
+                         qk_norm=True),
+        "llama3.2-1b": dict(n_layers=16, d_model=2048, n_heads=32,
+                            n_kv_heads=8, d_ff=8192, vocab_size=128256),
+        "rwkv6-1.6b": dict(n_layers=24, d_model=2048, d_ff=7168,
+                           vocab_size=65536, rwkv=True),
+    }[arch]
+    cfg = get_config(arch)
+    for k, v in expected.items():
+        assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)

@@ -1,0 +1,155 @@
+"""Unit tests of the FACADE machinery: split, topology, aggregation (Eq 3/4),
+head selection, settlement mechanics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import facade as facade_mod
+from repro.core import split, topology
+from repro.core.bindings import make_binding
+from repro.core.state import init_facade_state
+from repro.configs.facade_paper import lenet
+
+
+# --------------------------------------------------------------------------
+def test_split_merge_roundtrip():
+    params = {"a": jnp.ones((3,)), "b": jnp.zeros((2, 2)),
+              "head": jnp.full((4,), 2.0)}
+    core, head = split.split_params(params, ("head",))
+    assert set(core) == {"a", "b"} and set(head) == {"head"}
+    merged = split.merge_params(core, head)
+    assert jax.tree.all(jax.tree.map(jnp.array_equal, merged, params))
+
+
+def test_stack_select_set_head():
+    head = {"w": jnp.arange(6.0).reshape(2, 3)}
+    st = split.stack_heads(head, k=4)
+    assert st["w"].shape == (4, 2, 3)
+    picked = split.select_head(st, jnp.int32(2))
+    assert picked["w"].shape == (2, 3)
+    new = {"w": jnp.full((2, 3), 9.0)}
+    st2 = split.set_head(st, jnp.int32(1), new)
+    assert float(st2["w"][1].sum()) == 9.0 * 6
+    assert float(st2["w"][0, 0, 1]) == 1.0  # others untouched
+
+
+# --------------------------------------------------------------------------
+def test_random_regular_topology():
+    key = jax.random.PRNGKey(0)
+    n, r = 16, 4
+    adj = np.asarray(topology.random_regular(key, n, r))
+    assert adj.shape == (n, n)
+    assert np.array_equal(adj, adj.T), "undirected"
+    assert np.all(np.diag(adj) == 0), "no self loops"
+    deg = adj.sum(1)
+    assert np.all(deg >= 1), "no isolated nodes"
+    assert abs(deg.mean() - r) <= 1.0, f"mean degree {deg.mean()} != ~{r}"
+
+
+def test_mixing_matrix_rows_stochastic():
+    key = jax.random.PRNGKey(1)
+    adj = topology.random_regular(key, 12, 4)
+    w = np.asarray(topology.mixing_matrix(adj))
+    np.testing.assert_allclose(w.sum(1), 1.0, rtol=1e-6)
+    assert np.all(w >= 0)
+
+
+# --------------------------------------------------------------------------
+def test_head_aggregation_matches_naive_loop():
+    """Eq. 4 (vectorized einsum) vs a literal per-node loop."""
+    key = jax.random.PRNGKey(2)
+    n, k, d = 6, 3, 5
+    adj = np.asarray(topology.random_regular(key, n, 2), np.float32)
+    cid = np.array([0, 1, 2, 0, 1, 2], np.int32)
+    heads = np.asarray(jax.random.normal(key, (n, k, d)))
+
+    got = facade_mod._aggregate_heads(
+        jnp.asarray(adj), jnp.asarray(cid), {"w": jnp.asarray(heads)}, k)
+    got = np.asarray(got["w"])
+
+    want = np.empty_like(heads)
+    for i in range(n):
+        for c in range(k):
+            acc = heads[i, c].copy()
+            cnt = 1.0
+            for j in range(n):
+                if adj[i, j] and cid[j] == c:
+                    acc += heads[j, cid[j]]
+                    cnt += 1
+            want[i, c] = acc / cnt
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_core_mixing_matches_naive_loop():
+    key = jax.random.PRNGKey(3)
+    n, d = 5, 7
+    adj = np.asarray(topology.random_regular(key, n, 2), np.float32)
+    w = np.asarray(topology.mixing_matrix(jnp.asarray(adj)))
+    cores = np.asarray(jax.random.normal(key, (n, d)))
+    got = np.asarray(facade_mod._mix_cores(
+        jnp.asarray(w), {"p": jnp.asarray(cores)})["p"])
+    want = w @ cores
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+# --------------------------------------------------------------------------
+def test_facade_round_shapes_and_selection():
+    cfg = lenet(smoke=True).replace(n_classes=4)
+    binding = make_binding(cfg)
+    n, k, H, B = 4, 2, 2, 4
+    fcfg = facade_mod.FacadeConfig(n_nodes=n, k=k, degree=2, local_steps=H,
+                                   lr=0.05)
+    state = init_facade_state(binding, jax.random.PRNGKey(0), n, k)
+    x = jax.random.normal(jax.random.PRNGKey(1),
+                          (n, H, B, cfg.image_size, cfg.image_size, 3))
+    y = jax.random.randint(jax.random.PRNGKey(2), (n, H, B), 0, 4,
+                           dtype=jnp.int32)
+    state2, info = facade_mod.facade_round(fcfg, binding, state,
+                                           {"x": x, "y": y})
+    assert info["selection_losses"].shape == (n, k)
+    assert info["cluster_id"].shape == (n,)
+    assert state2.round == 1
+    assert np.all(np.asarray(info["cluster_id"]) >= 0)
+    assert np.all(np.asarray(info["cluster_id"]) < k)
+    # comm accounting: degree * n * (core + head + id)
+    assert float(info["round_bytes"]) > 0
+
+
+def test_warmup_round_trains_all_heads_identically():
+    cfg = lenet(smoke=True).replace(n_classes=4)
+    binding = make_binding(cfg)
+    n, k = 3, 3
+    fcfg = facade_mod.FacadeConfig(n_nodes=n, k=k, degree=1, local_steps=1,
+                                   lr=0.05, warmup_rounds=1)
+    state = init_facade_state(binding, jax.random.PRNGKey(0), n, k)
+    x = jax.random.normal(jax.random.PRNGKey(1), (n, 1, 2, 16, 16, 3))
+    y = jax.random.randint(jax.random.PRNGKey(2), (n, 1, 2), 0, 4,
+                           dtype=jnp.int32)
+    state2, _ = facade_mod.facade_round(fcfg, binding, state,
+                                        {"x": x, "y": y}, warmup=True)
+    # all k head slots equal after a warmup round (App. F shared training)
+    for leaf in jax.tree.leaves(state2.heads):
+        leaf = np.asarray(leaf, np.float32)
+        for c in range(1, k):
+            np.testing.assert_allclose(leaf[:, c], leaf[:, 0], rtol=1e-6)
+
+
+def test_final_allreduce_reaches_clusterwise_consensus():
+    cfg = lenet(smoke=True).replace(n_classes=4)
+    binding = make_binding(cfg)
+    n, k = 4, 2
+    fcfg = facade_mod.FacadeConfig(n_nodes=n, k=k, degree=2, local_steps=1,
+                                   lr=0.05)
+    state = init_facade_state(binding, jax.random.PRNGKey(0), n, k)
+    # give nodes distinct cores
+    state = state._replace(
+        cores=jax.tree.map(
+            lambda l: l + jnp.arange(n, dtype=jnp.float32).reshape(
+                (n,) + (1,) * (l.ndim - 1)).astype(l.dtype), state.cores))
+    out = facade_mod.final_allreduce(fcfg, state)
+    for leaf in jax.tree.leaves(out.cores):
+        leaf = np.asarray(leaf, np.float32)
+        for i in range(1, n):
+            np.testing.assert_allclose(leaf[i], leaf[0], rtol=1e-5,
+                                       atol=1e-5)

@@ -1,0 +1,81 @@
+"""FACADE over an LM backbone: the core/head machinery must work for the
+assigned transformer architectures, and the fused head-select kernel must
+agree with the binding's per-head losses (the decision both paths feed is
+the paper's cluster identification step)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import facade as facade_mod
+from repro.core.bindings import make_binding
+from repro.core.state import init_facade_state
+from repro.kernels.head_select.ops import facade_head_losses
+from repro.models.base import get_config
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "rwkv6-1.6b"])
+def test_facade_round_on_lm(arch):
+    cfg = get_config(arch, smoke=True)
+    binding = make_binding(cfg)
+    n, k, H, B, S = 2, 2, 1, 2, 32
+    fcfg = facade_mod.FacadeConfig(n_nodes=n, k=k, degree=1, local_steps=H,
+                                   lr=1e-2)
+    state = init_facade_state(binding, jax.random.PRNGKey(0), n, k,
+                              head_jitter=1e-3)
+    key = jax.random.PRNGKey(1)
+    toks = jax.random.randint(key, (n, H, B, S + 1), 0, cfg.vocab_size,
+                              dtype=jnp.int32)
+    batches = {"tokens": toks[..., :-1], "labels": toks[..., 1:],
+               "mask": jnp.ones((n, H, B, S), jnp.float32)}
+    state2, info = facade_mod.facade_round(fcfg, binding, state, batches)
+    assert info["selection_losses"].shape == (n, k)
+    assert np.all(np.isfinite(np.asarray(info["selection_losses"])))
+    for leaf in jax.tree.leaves(state2.cores):
+        assert np.all(np.isfinite(np.asarray(leaf, np.float32)))
+
+
+def test_head_select_kernel_agrees_with_binding():
+    """The Pallas fused-CE kernel and the binding's head_loss must rank the
+    k candidate heads identically (same argmin -> same clustering)."""
+    cfg = get_config("llama3.2-1b", smoke=True)
+    binding = make_binding(cfg)
+    k = 3
+    key = jax.random.PRNGKey(0)
+    params = binding.init(key)
+    from repro.core import split
+    core, head = split.split_params(params, binding.head_keys)
+    heads_k = split.stack_heads(head, k, key=jax.random.PRNGKey(1),
+                                jitter=0.02)
+
+    B, S = 2, 32
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S + 1), 0,
+                              cfg.vocab_size, dtype=jnp.int32)
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:],
+             "mask": jnp.ones((B, S), jnp.float32)}
+
+    feats = binding.features(core, batch)
+
+    # path 1: binding loop (what facade_round uses on CPU)
+    losses_binding = jnp.stack([
+        binding.head_loss(jax.tree.map(lambda l: l[i], heads_k), feats,
+                          batch) for i in range(k)])
+
+    # path 2: fused Pallas kernel on the flattened token stream
+    from repro.models import layers
+    normed = jnp.stack([
+        layers.rms_norm(feats, heads_k["final_norm"][i], cfg.norm_eps)
+        for i in range(k)])                                # [k,B,S,D]
+    w = heads_k["lm_head"]                                 # [k,D,V]
+    t = B * S
+    # kernel wants one shared feature stream; here the norm differs per
+    # head, so feed each head its own normed stream via vmap
+    losses_kernel = jax.vmap(
+        lambda f, wh: facade_head_losses(
+            f.reshape(t, -1), wh[None], batch["labels"].reshape(t),
+            batch["mask"].reshape(t), interpret=True)[0])(normed, w)
+
+    np.testing.assert_allclose(np.asarray(losses_kernel),
+                               np.asarray(losses_binding),
+                               rtol=1e-4, atol=1e-5)
+    assert int(jnp.argmin(losses_kernel)) == int(jnp.argmin(losses_binding))

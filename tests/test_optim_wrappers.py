@@ -1,0 +1,69 @@
+"""Mixed-precision master weights, grad clipping, grad accumulation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+
+
+def test_master_weights_avoid_bf16_drift():
+    """1000 tiny updates on bf16 params: with master weights the value
+    tracks fp32 reference; without, bf16 rounding freezes progress."""
+    lr, n = 1e-4, 1000
+
+    def run(opt, dtype):
+        params = {"w": jnp.ones((), dtype)}
+        state = opt.init(params)
+
+        @jax.jit
+        def step(p, s):
+            g = {"w": jnp.ones((), dtype)}  # constant gradient
+            ups, s = opt.update(g, s, p)
+            return optim.apply_updates(p, ups), s
+
+        for _ in range(n):
+            params, state = step(params, state)
+        return float(params["w"])
+
+    ref = 1.0 - lr * n                                # exact fp32 answer
+    plain = run(optim.sgd(lr), jnp.bfloat16)
+    master = run(optim.master_weights(optim.sgd(lr)), jnp.bfloat16)
+    # returned params are bf16-cast of the fp32 master: error <= bf16 ulp
+    assert abs(master - ref) <= 2 ** -8, (master, ref)
+    # plain bf16: 1.0 - 1e-4 rounds back to 1.0 -> no progress at all
+    assert abs(plain - 1.0) < 1e-3, plain
+
+
+def test_clip_by_global_norm():
+    opt = optim.clip_by_global_norm(optim.sgd(1.0), max_norm=1.0)
+    params = {"a": jnp.zeros((3,)), "b": jnp.zeros((4,))}
+    state = opt.init(params)
+    g = {"a": jnp.full((3,), 100.0), "b": jnp.full((4,), 100.0)}
+    ups, _ = opt.update(g, state, params)
+    norm = np.sqrt(sum(float(jnp.sum(jnp.square(u)))
+                       for u in jax.tree.leaves(ups)))
+    assert norm <= 1.0 + 1e-5
+    # small grads pass through unclipped
+    g2 = {"a": jnp.full((3,), 0.01), "b": jnp.full((4,), 0.01)}
+    ups2, _ = opt.update(g2, opt.init(params), params)
+    np.testing.assert_allclose(np.asarray(ups2["a"]), 0.01, rtol=1e-5)
+
+
+def test_accumulate_gradients_matches_full_batch():
+    key = jax.random.PRNGKey(0)
+    w = {"w": jax.random.normal(key, (8, 4))}
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, 8))
+    y = jax.random.normal(jax.random.PRNGKey(2), (16, 4))
+
+    def loss_fn(p, batch):
+        pred = batch["x"] @ p["w"]
+        l = jnp.mean(jnp.square(pred - batch["y"]))
+        return l, {"l": l}
+
+    (full_loss, _), full_g = jax.value_and_grad(loss_fn, has_aux=True)(
+        w, {"x": x, "y": y})
+    micro = {"x": x.reshape(4, 4, 8), "y": y.reshape(4, 4, 4)}
+    (acc_loss, _), acc_g = optim.accumulate_gradients(loss_fn, w, micro)
+    np.testing.assert_allclose(float(acc_loss), float(full_loss), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(acc_g["w"]),
+                               np.asarray(full_g["w"]), rtol=1e-4, atol=1e-6)

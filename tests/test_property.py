@@ -1,0 +1,145 @@
+"""Property-based tests (hypothesis) of system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import split, topology
+from repro.fairness.metrics import (demographic_parity, equalized_odds,
+                                    fair_accuracy)
+from repro.models import transformer
+from repro.models.attention import chunked_sdpa, sdpa
+from repro.roofline.analysis import (collective_bytes_from_hlo,
+                                     parse_shape_list)
+
+_settings = settings(max_examples=25, deadline=None)
+
+
+# --------------------------------------------------------------------------
+@_settings
+@given(n=st.integers(4, 32), r=st.integers(1, 6), seed=st.integers(0, 999))
+def test_topology_invariants(n, r, seed):
+    r = min(r, n - 1)
+    adj = np.asarray(topology.random_regular(jax.random.PRNGKey(seed), n, r))
+    assert np.array_equal(adj, adj.T)
+    assert np.all(np.diag(adj) == 0)
+    assert np.all(adj.sum(1) >= 1)
+    w = np.asarray(topology.mixing_matrix(jnp.asarray(adj)))
+    np.testing.assert_allclose(w.sum(1), 1.0, rtol=1e-5)
+
+
+# --------------------------------------------------------------------------
+@_settings
+@given(st.lists(st.floats(0.0, 1.0), min_size=1, max_size=6),
+       st.floats(0.0, 1.0))
+def test_fair_accuracy_bounds(accs, lam):
+    fa = fair_accuracy(accs, lam=lam)
+    assert -1e-9 <= fa <= 1.0 + 1e-9
+    # equal accuracies maximize the penalty term
+    fa_eq = fair_accuracy([accs[0]] * len(accs), lam=lam)
+    assert fa_eq >= lam * accs[0] + (1 - lam) * 1.0 - 1e-9
+
+
+@_settings
+@given(n_classes=st.integers(2, 6), n=st.integers(10, 80),
+       seed=st.integers(0, 99))
+def test_dp_eo_bounds_and_perfect_case(n_classes, n, seed):
+    rng = np.random.default_rng(seed)
+    preds = [rng.integers(0, n_classes, n), rng.integers(0, n_classes, n)]
+    labels = [rng.integers(0, n_classes, n), rng.integers(0, n_classes, n)]
+    dp = demographic_parity(preds, n_classes)
+    eo = equalized_odds(preds, labels, n_classes)
+    assert 0.0 <= dp <= 2.0 + 1e-9   # sum over classes of |p0-p1| <= 2
+    assert 0.0 <= eo <= 2.0 * n_classes + 1e-9
+    # identical prediction distributions -> DP == 0
+    assert demographic_parity([preds[0], preds[0]], n_classes) < 1e-9
+    assert equalized_odds([preds[0], preds[0]], [labels[0], labels[0]],
+                          n_classes) < 1e-9
+
+
+# --------------------------------------------------------------------------
+@_settings
+@given(keys=st.integers(0, 999), k=st.integers(1, 5))
+def test_split_partition_invariant(keys, k):
+    key = jax.random.PRNGKey(keys)
+    params = {"a": jax.random.normal(key, (3, 3)),
+              "b": jax.random.normal(key, (2,)),
+              "final_norm": jnp.ones((4,)),
+              "lm_head": jax.random.normal(key, (4, 8))}
+    core, head = split.split_params(params, ("final_norm", "lm_head"))
+    assert set(core) | set(head) == set(params)
+    assert not (set(core) & set(head))
+    st_heads = split.stack_heads(head, k)
+    for i in range(k):
+        sel = split.select_head(st_heads, jnp.int32(i))
+        for name in head:
+            np.testing.assert_array_equal(np.asarray(sel[name]),
+                                          np.asarray(head[name]))
+
+
+# --------------------------------------------------------------------------
+@_settings
+@given(b=st.integers(1, 3), s=st.sampled_from([32, 64, 128]),
+       hq=st.sampled_from([2, 4]), g=st.sampled_from([1, 2]),
+       seed=st.integers(0, 99))
+def test_chunked_sdpa_equals_sdpa(b, s, hq, g, seed):
+    hkv = hq // g
+    d = 16
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    q = 0.5 * jax.random.normal(ks[0], (b, s, hq, d))
+    k = 0.5 * jax.random.normal(ks[1], (b, s, hkv, d))
+    v = 0.5 * jax.random.normal(ks[2], (b, s, hkv, d))
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    o1 = sdpa(q, k, v, pos, pos)
+    o2 = chunked_sdpa(q, k, v, pos, pos, block_q=16)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=1e-5, atol=1e-5)
+
+
+@_settings
+@given(b=st.integers(1, 2), s=st.sampled_from([64, 128]),
+       chunk=st.sampled_from([16, 32, 64]), seed=st.integers(0, 99))
+def test_chunked_ce_matches_plain(b, s, chunk, seed):
+    d, v = 32, 128
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    feats = jax.random.normal(ks[0], (b, s, d))
+    w = 0.1 * jax.random.normal(ks[1], (d, v))
+    labels = jax.random.randint(ks[2], (b, s), 0, v, dtype=jnp.int32)
+    mask = (jax.random.uniform(ks[3], (b, s)) > 0.2).astype(jnp.float32)
+
+    loss, acc = transformer.chunked_ce(feats, w, labels, mask, chunk=chunk)
+    logits = (feats @ w).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, -1)
+    gold = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+    want = ((lse - gold) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    np.testing.assert_allclose(float(loss), float(want), rtol=1e-5)
+
+
+# --------------------------------------------------------------------------
+@_settings
+@given(dt=st.sampled_from(["f32", "bf16", "s32"]),
+       dims=st.lists(st.integers(1, 64), min_size=0, max_size=4))
+def test_parse_shape_bytes(dt, dims):
+    nb = {"f32": 4, "bf16": 2, "s32": 4}[dt]
+    text = f"{dt}[{','.join(map(str, dims))}]"
+    want = nb * int(np.prod(dims)) if dims else nb
+    assert parse_shape_list(text) == want
+
+
+def test_collective_parse_on_synthetic_hlo():
+    hlo = """
+  %ag = f32[4,8]{1,0} all-gather(%x), dimensions={0}
+  %ar.1 = bf16[16]{0} all-reduce(%y), to_apply=%sum
+  %dot.5 = f32[2,2]{1,0} dot(%a, %b)
+  %cp = f32[4]{0} collective-permute(%z)
+  %tup = (f32[2,2]{1,0}, f32[4]{0}) all-reduce(%p, %q), to_apply=%sum
+"""
+    out = collective_bytes_from_hlo(hlo)
+    assert out["all-gather"] == 4 * 8 * 4
+    assert out["all-reduce"] == 16 * 2 + (2 * 2 * 4 + 4 * 4)
+    assert out["collective-permute"] == 4 * 4
+    assert out["total"] == out["all-gather"] + out["all-reduce"] + \
+        out["collective-permute"]
+    assert out["count"] == 4

@@ -1,0 +1,140 @@
+"""Sharding rule engine: divisibility fallbacks, layout choices, and the
+abstract (device-free) parts of the dry-run plumbing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import shardings
+from repro.configs import INPUT_SHAPES
+from repro.launch.steps import is_supported, resolve_config
+from repro.models.base import get_config
+
+
+class FakeMesh:
+    """Duck-typed mesh: shardings.py only reads .shape."""
+
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+
+
+MESH = FakeMesh(data=16, model=16)
+
+
+def test_col_rule_shards_last_dim():
+    spec = shardings.leaf_spec("layers/attn/wq", (2048, 4096), MESH)
+    assert spec[-1] == "model"
+
+
+def test_row_rule_shards_second_to_last():
+    spec = shardings.leaf_spec("layers/attn/wo", (4096, 2048), MESH)
+    assert spec[0] in ("model", "data")  # row -> model preferred
+    assert spec[0] == "model"
+
+
+def test_indivisible_dim_falls_back():
+    # vocab 73448 = 8*9181 not divisible by 16 -> lm_head falls to dim -2
+    spec = shardings.leaf_spec("lm_head", (2560, 73448), MESH)
+    assert spec[-1] is None
+    assert spec[-2] == "model"
+
+
+def test_fully_indivisible_replicates():
+    spec = shardings.leaf_spec("layers/attn/wq", (7, 9), MESH)
+    assert all(s is None for s in spec)
+
+
+def test_expert_rule_uses_expert_axis():
+    # [E, D, F] with E=64 divisible by 16
+    spec = shardings.leaf_spec("layers/moe/w_gate", (64, 2048, 1408), MESH)
+    assert spec[0] == "model"
+
+
+def test_expert_rule_fallback_to_col():
+    # 8 experts < 16 -> shard inner dim instead
+    spec = shardings.leaf_spec("layers/moe/w_gate", (8, 6144, 32768), MESH)
+    assert spec[0] is None
+    assert "model" in spec
+
+
+def test_fsdp_shards_largest_free_dim():
+    spec = shardings.leaf_spec("layers/attn/wq", (4096, 4096), MESH,
+                               fsdp=True)
+    assert "data" in spec and "model" in spec
+
+
+def test_small_leaf_not_fsdp_sharded():
+    spec = shardings.leaf_spec("layers/norm1", (4096,), MESH, fsdp=True)
+    assert all(s is None for s in spec) or spec[0] != "data"
+
+
+def test_batch_specs_multi_pod():
+    mesh = FakeMesh(pod=2, data=16, model=16)
+    batch = {"tokens": jax.ShapeDtypeStruct((256, 4096), jnp.int32)}
+    specs = shardings.batch_specs(batch, mesh)
+    assert specs["tokens"][0] == ("pod", "data")
+
+
+def test_batch_specs_indivisible_batch_falls_to_seq():
+    # batch=3 not divisible -> the seq dim takes the data axis instead
+    batch = {"tokens": jax.ShapeDtypeStruct((3, 64), jnp.int32)}
+    specs = shardings.batch_specs(batch, MESH)
+    assert specs["tokens"] == P(None, "data")
+
+
+def test_batch_specs_nothing_divisible_replicates():
+    batch = {"tokens": jax.ShapeDtypeStruct((3, 7), jnp.int32)}
+    specs = shardings.batch_specs(batch, MESH)
+    assert specs["tokens"] == P(None, None)
+
+
+# --------------------------------------------------------------------------
+def test_long_ctx_support_table():
+    """Skips exactly match DESIGN.md: 4 full-attention archs skip long_500k."""
+    skips = [(a, s) for a in
+             ("minicpm3-4b grok-1-314b deepseek-moe-16b hymba-1.5b "
+              "stablelm-12b llava-next-34b whisper-tiny qwen3-8b "
+              "llama3.2-1b rwkv6-1.6b").split()
+             for s in INPUT_SHAPES if not is_supported(a, s)]
+    assert sorted(skips) == sorted([
+        ("grok-1-314b", "long_500k"), ("deepseek-moe-16b", "long_500k"),
+        ("llava-next-34b", "long_500k"), ("whisper-tiny", "long_500k")])
+
+
+def test_long_ctx_swa_variant():
+    cfg = resolve_config("llama3.2-1b", "long_500k")
+    assert cfg.sliding_window == 8192
+    cfg = resolve_config("llama3.2-1b", "train_4k")
+    assert cfg.sliding_window == 0
+
+
+def test_unroll_resolve():
+    cfg = resolve_config("llama3.2-1b", "train_4k", unroll=True)
+    assert cfg.scan_unroll == cfg.n_layers
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "grok-1-314b",
+                                  "rwkv6-1.6b", "whisper-tiny"])
+def test_param_specs_cover_full_tree(arch):
+    """Every full-config param leaf gets a PartitionSpec of matching rank."""
+    from repro.models import api
+    cfg = get_config(arch)
+    sds = jax.eval_shape(
+        lambda k: api.init_params(cfg, k),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    specs = shardings.param_specs(sds, MESH)
+    flat_s, _ = jax.tree_util.tree_flatten(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    flat_l = jax.tree.leaves(sds)
+    assert len(flat_s) == len(flat_l)
+    for sp, leaf in zip(flat_s, flat_l):
+        assert isinstance(sp, P)
+        assert len(sp) <= len(leaf.shape)
+        # every named axis divides its dim
+        for d, ax in enumerate(sp):
+            if ax is None:
+                continue
+            size = np.prod([MESH.shape[a] for a in
+                            (ax if isinstance(ax, tuple) else (ax,))])
+            assert leaf.shape[d] % size == 0, (arch, sp, leaf.shape)

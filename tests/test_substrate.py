@@ -1,0 +1,135 @@
+"""Substrate tests: optimizers, schedules, data pipeline, checkpointing,
+comm accounting, sharding rules."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.checkpoint import io as ckpt_io
+from repro.comm.accounting import CommLog
+from repro.data import pipeline
+from repro.data.synthetic import SynthSpec, apply_transform, \
+    make_clustered_data
+from repro.data.tokens import TokenSpec, lm_batch, make_clustered_tokens
+
+
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("make", [lambda: optim.sgd(0.1),
+                                  lambda: optim.momentum(0.1),
+                                  lambda: optim.adamw(0.1)],
+                         ids=["sgd", "momentum", "adamw"])
+def test_optimizer_converges_on_quadratic(make):
+    opt = make()
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
+
+    for _ in range(150):
+        g = jax.grad(loss)(params)
+        ups, state = opt.update(g, state, params)
+        params = optim.apply_updates(params, ups)
+    assert float(loss(params)) < 1e-2
+
+
+def test_momentum_slot_dtype():
+    opt = optim.momentum(0.1, slot_dtype=jnp.bfloat16)
+    params = {"w": jnp.zeros((4,), jnp.bfloat16)}
+    state = opt.init(params)
+    slots = [l for l in jax.tree.leaves(state) if hasattr(l, "dtype")]
+    assert any(l.dtype == jnp.bfloat16 for l in slots)
+
+
+def test_schedules():
+    import jax.numpy as jnp
+    s = optim.cosine_warmup(peak=1.0, warmup_steps=10, total_steps=100)
+    assert float(s(jnp.asarray(0))) < float(s(jnp.asarray(9))) <= 1.0 + 1e-6
+    assert float(s(jnp.asarray(99))) < float(s(jnp.asarray(50)))
+    c = optim.constant(0.5)
+    assert float(c(0)) == float(c(1000)) == 0.5
+
+
+# --------------------------------------------------------------------------
+def test_synthetic_dataset_structure():
+    spec = SynthSpec(n_classes=4, image_size=16, samples_per_class=8,
+                     test_per_class=8, seed=0)
+    ds = make_clustered_data(spec, (3, 1), ("rot0", "rot180"))
+    assert ds.train_x.shape == (4, 32, 16, 16, 3)
+    assert ds.train_y.shape == (4, 32)
+    assert ds.k == 2 and ds.n_nodes == 4
+    assert list(ds.node_cluster) == [0, 0, 0, 1]
+    # uniform labels per node (paper: uniform partitioning)
+    for i in range(4):
+        counts = np.bincount(ds.train_y[i], minlength=4)
+        assert np.all(counts == 8)
+
+
+def test_rotation_transform_is_feature_skew_only():
+    """Rotation preserves pixel statistics (same multiset of values)."""
+    x = np.random.default_rng(0).normal(size=(5, 8, 8, 3)).astype(np.float32)
+    r = apply_transform(x, "rot180")
+    assert r.shape == x.shape
+    np.testing.assert_allclose(np.sort(r.ravel()), np.sort(x.ravel()))
+    np.testing.assert_allclose(apply_transform(r, "rot180"), x)
+
+
+@pytest.mark.parametrize("name", ["gray", "sepia", "saturate"])
+def test_color_transforms(name):
+    x = np.random.default_rng(0).uniform(-1, 1, (4, 8, 8, 3)).astype(
+        np.float32)
+    out = apply_transform(x, name)
+    assert out.shape == x.shape
+    assert np.all(np.isfinite(out))
+    assert not np.allclose(out, x)
+
+
+def test_round_batch_sampling_deterministic():
+    key = jax.random.PRNGKey(0)
+    x = jnp.arange(4 * 10 * 2.0).reshape(4, 10, 2)
+    y = jnp.tile(jnp.arange(10), (4, 1))
+    b1 = pipeline.sample_round_batches(key, x, y, 3, 4)
+    b2 = pipeline.sample_round_batches(key, x, y, 3, 4)
+    assert b1["x"].shape == (4, 3, 4, 2)
+    np.testing.assert_array_equal(np.asarray(b1["x"]), np.asarray(b2["x"]))
+
+
+def test_clustered_tokens_perm_property():
+    spec = TokenSpec(vocab_size=64, seq_len=32, seed=1)
+    data = make_clustered_tokens(spec, (2, 2), seqs_per_node=4)
+    assert data["train"].shape == (4, 4, 32)
+    assert len(data["test"]) == 2
+    b = lm_batch(data["train"][0])
+    np.testing.assert_array_equal(b["tokens"][..., 1:], b["labels"][..., :-1])
+
+
+# --------------------------------------------------------------------------
+def test_checkpoint_roundtrip():
+    tree = {"a": jnp.arange(6.0).reshape(2, 3),
+            "nested": {"b": jnp.ones((4,), jnp.bfloat16),
+                       "step": jnp.asarray(7)}}
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ckpt.npz")
+        ckpt_io.save(path, tree, meta={"step": 7})
+        out, meta = ckpt_io.load(path)
+    assert meta["step"] == 7
+    assert np.asarray(out["nested"]["b"]).dtype == np.dtype("bfloat16")
+    np.testing.assert_allclose(
+        np.asarray(out["nested"]["b"], np.float32), 1.0)
+    np.testing.assert_array_equal(np.asarray(out["a"]),
+                                  np.asarray(tree["a"]))
+
+
+# --------------------------------------------------------------------------
+def test_commlog_bytes_to_target():
+    log = CommLog()
+    log.record(1, 100, acc=0.1)
+    log.record(2, 100, acc=0.5)
+    log.record(3, 100, acc=0.9)
+    assert log.bytes_to_target(0.5) == 200
+    assert log.bytes_to_target(0.95) is None
+    assert log.total_gb == pytest.approx(300 / 1e9)
