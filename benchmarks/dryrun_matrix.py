@@ -29,11 +29,25 @@ def load(pattern: str):
 
 
 def run(quick: bool = True) -> dict:
+    # tiny netsim config exercised on every invocation (churn_resilience
+    # smoke: 4-node FACADE under edge-churn) so the netsim path can't rot;
+    # a smoke failure is reported in the payload, never aborts the table
+    from . import churn_resilience
+    try:
+        net_rec = churn_resilience.smoke()
+    except Exception as e:
+        net_rec = {"status": "fail", "preset": "edge-churn", "error": repr(e)}
+        print(f"netsim smoke [edge-churn]: FAIL ({e!r})")
+    else:
+        print(f"netsim smoke [{net_rec['preset']}]: {net_rec['status']} "
+              f"({net_rec['sim_seconds']:.2f} sim-s, "
+              f"{net_rec['total_bytes']/1e3:.1f} KB)")
+
     recs = [r for r in load("dryrun_*.jsonl") if r.get("tag", "") == ""]
     if not recs:
         print("no dry-run records; run `python -m repro.launch.dryrun --all` "
               "(and --multi-pod) first")
-        return {}
+        return {"netsim_smoke": net_rec}
     rows = []
     ok = fail = skip = 0
     for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
@@ -57,7 +71,8 @@ def run(quick: bool = True) -> dict:
          "t_coll", "dominant"], rows))
     print(f"\n{ok} compiled, {fail} failed, {skip} skipped "
           f"(full-attention long_500k carve-outs)")
-    payload = {"n_ok": ok, "n_fail": fail, "n_skip": skip, "records": recs}
+    payload = {"n_ok": ok, "n_fail": fail, "n_skip": skip, "records": recs,
+               "netsim_smoke": net_rec}
     common.save("dryrun_matrix", payload)
     return payload
 

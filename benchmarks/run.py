@@ -10,9 +10,9 @@ import argparse
 import sys
 import time
 
-from . import (color_shift, comm_cost, dryrun_matrix, fair_accuracy,
-               fairness_dp_eo, k_sensitivity, kernel_bench, label_skew,
-               percluster_accuracy, settlement, warmup_ablation)
+from . import (churn_resilience, color_shift, comm_cost, dryrun_matrix,
+               fair_accuracy, fairness_dp_eo, k_sensitivity, kernel_bench,
+               label_skew, percluster_accuracy, settlement, warmup_ablation)
 
 SUITES = {
     "percluster_accuracy": percluster_accuracy,   # Fig. 3 / Tab. II
@@ -24,6 +24,7 @@ SUITES = {
     "warmup_ablation": warmup_ablation,           # App. F mitigation
     "label_skew": label_skew,                     # App. G
     "color_shift": color_shift,                   # App. H
+    "churn_resilience": churn_resilience,         # netsim presets sweep
     "kernel_bench": kernel_bench,                 # kernels (systems)
     "dryrun_matrix": dryrun_matrix,               # §Dry-run / §Roofline
 }

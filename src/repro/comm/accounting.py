@@ -1,7 +1,16 @@
-"""Communication-volume accounting (paper Sec. V-E).
+"""Communication-volume + simulated-time accounting (paper Sec. V-E).
 
-The DL rounds report ``round_bytes``; this module accumulates them and
-answers 'how many GB to reach target accuracy X' — the paper's Fig. 7."""
+The DL rounds report ``round_bytes`` (and, under ``repro.netsim``, a
+simulated ``round_s``); this module accumulates both and answers 'how many
+GB / simulated hours to reach target accuracy X' — the paper's Fig. 7 and
+its wall-clock companion.
+
+Accuracy is only known on rounds where an eval actually ran. Eval-less
+rounds carry the last known accuracy for plotting convenience, but target
+queries (``bytes_to_target`` / ``seconds_to_target``) consult only
+real-eval rounds — otherwise the backfilled accuracy would attribute the
+target crossing to a round where nothing was measured.
+"""
 from __future__ import annotations
 
 import numpy as np
@@ -10,28 +19,48 @@ import numpy as np
 class CommLog:
     def __init__(self):
         self.rounds: list[int] = []
-        self.bytes: list[float] = []
-        self.acc: list[float] = []
+        self.bytes: list[float] = []     # cumulative bytes sent
+        self.seconds: list[float] = []   # cumulative simulated wall-clock
+        self.acc: list[float] = []       # last-known accuracy (plot-friendly)
+        self.evaled: list[bool] = []     # True where acc was really measured
 
-    def record(self, rnd: int, round_bytes: float, acc: float | None = None):
+    def record(self, rnd: int, round_bytes: float, acc: float | None = None,
+               round_s: float = 0.0):
         total = (self.bytes[-1] if self.bytes else 0.0) + float(round_bytes)
+        total_s = (self.seconds[-1] if self.seconds else 0.0) + float(round_s)
         self.rounds.append(int(rnd))
         self.bytes.append(total)
+        self.seconds.append(total_s)
+        self.evaled.append(acc is not None)
         if acc is not None:
             self.acc.append(float(acc))
         else:
             self.acc.append(self.acc[-1] if self.acc else 0.0)
 
-    def bytes_to_target(self, target_acc: float) -> float | None:
-        """Cumulative bytes when accuracy first reaches target, else None."""
-        for b, a in zip(self.bytes, self.acc):
-            if a >= target_acc:
-                return b
+    def _first_crossing(self, target_acc: float) -> int | None:
+        for i, (a, e) in enumerate(zip(self.acc, self.evaled)):
+            if e and a >= target_acc:
+                return i
         return None
+
+    def bytes_to_target(self, target_acc: float) -> float | None:
+        """Cumulative bytes at the first MEASURED accuracy >= target, else
+        None (backfilled eval-less rounds never count)."""
+        i = self._first_crossing(target_acc)
+        return None if i is None else self.bytes[i]
+
+    def seconds_to_target(self, target_acc: float) -> float | None:
+        """Simulated seconds at the first measured accuracy >= target."""
+        i = self._first_crossing(target_acc)
+        return None if i is None else self.seconds[i]
 
     @property
     def total_gb(self) -> float:
         return (self.bytes[-1] / 1e9) if self.bytes else 0.0
+
+    @property
+    def total_hours(self) -> float:
+        return (self.seconds[-1] / 3600.0) if self.seconds else 0.0
 
 
 def gb(x: float) -> float:

@@ -11,7 +11,8 @@ import jax.numpy as jnp
 
 from .. import split, topology
 from ..bindings import Binding
-from ..state import BaselineState
+from ..state import BaselineState, freeze_inactive
+from ..netwire import comm_info, masked_topology
 
 
 @dataclasses.dataclass(frozen=True)
@@ -29,7 +30,7 @@ def init_dac_extra(n: int):
 
 
 def dac_round(cfg: DACConfig, binding: Binding, state: BaselineState,
-              batches):
+              batches, net=None):
     n = cfg.n_nodes
     key, k_top = jax.random.split(state.rng)
     sim = state.extra["sim"]
@@ -40,6 +41,7 @@ def dac_round(cfg: DACConfig, binding: Binding, state: BaselineState,
     _, nbr = jax.lax.top_k(logits + gumbel, cfg.degree)      # [n, r]
     adj = jnp.zeros((n, n)).at[jnp.arange(n)[:, None], nbr].set(1.0)
     adj = jnp.maximum(adj, adj.T)  # symmetrize (push-pull exchange)
+    adj = masked_topology(net, adj)
 
     # --- similarity update: inverse loss of peer's model on local batch ---
     first = jax.tree.map(lambda b: b[:, 0], batches)
@@ -54,8 +56,13 @@ def dac_round(cfg: DACConfig, binding: Binding, state: BaselineState,
         return jax.vmap(loss_of)(nbr[i])                     # [r]
 
     l_peer = jax.vmap(peer_losses)(jnp.arange(n))            # [n, r]
-    new_sim = sim.at[jnp.arange(n)[:, None], nbr].set(
-        1.0 / jnp.maximum(l_peer, 1e-6))
+    rows = jnp.arange(n)[:, None]
+    inv_loss = 1.0 / jnp.maximum(l_peer, 1e-6)
+    if net is not None:
+        # a lost/offline exchange brings no model to score — keep old entry
+        delivered = adj[rows, nbr] > 0                       # [n, r]
+        inv_loss = jnp.where(delivered, inv_loss, sim[rows, nbr])
+    new_sim = sim.at[rows, nbr].set(inv_loss)
 
     # --- aggregate with similarity weights, then local train ---
     w = topology.weighted_mixing(adj, jnp.maximum(new_sim, 1e-6))
@@ -72,10 +79,12 @@ def dac_round(cfg: DACConfig, binding: Binding, state: BaselineState,
         return pp
 
     params = jax.vmap(local)(params, batches)
+    if net is not None:
+        params = freeze_inactive(net.active, params, state.params)
+        new_sim = jnp.where(net.active[:, None] > 0, new_sim, sim)
 
     model_bytes = split.tree_size_bytes(
         jax.tree.map(lambda l: l[0], state.params))
-    info = {"round_bytes": jnp.asarray(
-        n * cfg.degree * model_bytes, jnp.float32)}
+    info = comm_info(net, adj, model_bytes, n * cfg.degree)
     return BaselineState(params=params, extra={"sim": new_sim},
                          round=state.round + 1, rng=key), info

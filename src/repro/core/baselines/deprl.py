@@ -12,7 +12,8 @@ import jax.numpy as jnp
 
 from .. import split, topology
 from ..bindings import Binding
-from ..state import BaselineState
+from ..state import BaselineState, freeze_inactive
+from ..netwire import comm_info, masked_topology
 
 
 @dataclasses.dataclass(frozen=True)
@@ -24,9 +25,9 @@ class DeprlConfig:
 
 
 def deprl_round(cfg: DeprlConfig, binding: Binding, state: BaselineState,
-                batches):
+                batches, net=None):
     """state.params [n, ...] full models; only cores are mixed."""
-    adj = topology.ring(cfg.n_nodes, cfg.degree)
+    adj = masked_topology(net, topology.ring(cfg.n_nodes, cfg.degree))
     w = topology.mixing_matrix(adj)
 
     def split_n(params):
@@ -48,9 +49,10 @@ def deprl_round(cfg: DeprlConfig, binding: Binding, state: BaselineState,
         return p
 
     params = jax.vmap(local)(cores, heads, batches)
+    if net is not None:
+        params = freeze_inactive(net.active, params, state.params)
 
     core_bytes = split.tree_size_bytes(jax.tree.map(lambda l: l[0], cores))
-    info = {"round_bytes": jnp.asarray(
-        cfg.n_nodes * cfg.degree * core_bytes, jnp.float32)}
+    info = comm_info(net, adj, core_bytes, cfg.n_nodes * cfg.degree)
     return BaselineState(params=params, extra=state.extra,
                          round=state.round + 1, rng=state.rng), info

@@ -9,7 +9,8 @@ import jax.numpy as jnp
 
 from .. import split, topology
 from ..bindings import Binding
-from ..state import BaselineState
+from ..state import BaselineState, freeze_inactive
+from ..netwire import comm_info, masked_topology
 
 
 @dataclasses.dataclass(frozen=True)
@@ -21,8 +22,8 @@ class DpsgdConfig:
 
 
 def dpsgd_round(cfg: DpsgdConfig, binding: Binding, state: BaselineState,
-                batches):
-    adj = topology.ring(cfg.n_nodes, cfg.degree)
+                batches, net=None):
+    adj = masked_topology(net, topology.ring(cfg.n_nodes, cfg.degree))
     w = topology.mixing_matrix(adj)
 
     def local(p, bh):
@@ -37,10 +38,11 @@ def dpsgd_round(cfg: DpsgdConfig, binding: Binding, state: BaselineState,
     params = jax.vmap(local)(state.params, batches)
     params = jax.tree.map(
         lambda p: jnp.einsum("ij,j...->i...", w.astype(p.dtype), p), params)
+    if net is not None:
+        params = freeze_inactive(net.active, params, state.params)
 
     model_bytes = split.tree_size_bytes(
         jax.tree.map(lambda l: l[0], state.params))
-    info = {"round_bytes": jnp.asarray(
-        cfg.n_nodes * cfg.degree * model_bytes, jnp.float32)}
+    info = comm_info(net, adj, model_bytes, cfg.n_nodes * cfg.degree)
     return BaselineState(params=params, extra=state.extra,
                          round=state.round + 1, rng=state.rng), info

@@ -10,7 +10,8 @@ import jax.numpy as jnp
 
 from .. import split, topology
 from ..bindings import Binding
-from ..state import BaselineState
+from ..state import BaselineState, freeze_inactive
+from ..netwire import comm_info, masked_topology
 
 
 @dataclasses.dataclass(frozen=True)
@@ -31,10 +32,13 @@ def _local_sgd(binding: Binding, params, batches_h, lr):
     return params
 
 
-def el_round(cfg: ELConfig, binding: Binding, state: BaselineState, batches):
-    """batches: pytree leading [n, H, B, ...]."""
+def el_round(cfg: ELConfig, binding: Binding, state: BaselineState, batches,
+             net=None):
+    """batches: pytree leading [n, H, B, ...]; net: optional
+    ``netsim.RoundConditions`` masks (see ``facade_round``)."""
     key, sub = jax.random.split(state.rng)
     adj = topology.random_regular(sub, cfg.n_nodes, cfg.degree)
+    adj = masked_topology(net, adj)
     w = topology.mixing_matrix(adj)
 
     params = jax.tree.map(
@@ -42,10 +46,11 @@ def el_round(cfg: ELConfig, binding: Binding, state: BaselineState, batches):
         state.params)
     params = jax.vmap(lambda p, b: _local_sgd(binding, p, b, cfg.lr))(
         params, batches)
+    if net is not None:
+        params = freeze_inactive(net.active, params, state.params)
 
     model_bytes = split.tree_size_bytes(
         jax.tree.map(lambda l: l[0], state.params))
-    info = {"round_bytes": jnp.asarray(
-        cfg.n_nodes * cfg.degree * model_bytes, jnp.float32)}
+    info = comm_info(net, adj, model_bytes, cfg.n_nodes * cfg.degree)
     return BaselineState(params=params, extra=state.extra,
                          round=state.round + 1, rng=key), info

@@ -23,7 +23,8 @@ import jax.numpy as jnp
 
 from . import split, topology
 from .bindings import Binding
-from .state import FacadeState
+from .netwire import comm_info, masked_topology
+from .state import FacadeState, freeze_inactive
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,15 +89,20 @@ def _local_sgd(binding: Binding, params, batches_h, lr: float):
 
 # --------------------------------------------------------------------------
 def facade_round(fcfg: FacadeConfig, binding: Binding, state: FacadeState,
-                 batches, warmup: bool = False):
+                 batches, warmup: bool = False, net=None):
     """One synchronous FACADE round for all nodes.
 
     batches: pytree with leading [n, H, B, ...] — per-node, per-local-step.
+    net: optional ``netsim.RoundConditions`` (edge_mask/active/straggler
+    masks). ``None`` is the exact ideal-medium code path; with masks, the
+    drawn topology is filtered through :func:`topology.effective_adjacency`,
+    churned-out nodes neither mix nor train (state frozen), and comm bytes
+    count the directed edges that actually carried a message.
     Returns (new_state, info dict with losses/selection/comm bytes).
     """
     n, k = fcfg.n_nodes, fcfg.k
     key, subkey = jax.random.split(state.rng)
-    adj = topology.random_regular(subkey, n, fcfg.degree)
+    adj = masked_topology(net, topology.random_regular(subkey, n, fcfg.degree))
     w = topology.mixing_matrix(adj)
 
     # --- aggregation (steps 2a/2b) ---
@@ -130,7 +136,11 @@ def facade_round(fcfg: FacadeConfig, binding: Binding, state: FacadeState,
         jax.tree.map(lambda l: l[0], state.cores))
     head_bytes = split.tree_size_bytes(
         jax.tree.map(lambda l: l[0, 0], state.heads))
-    sent_bytes = n * fcfg.degree * (core_bytes + head_bytes + 4)
+    payload = core_bytes + head_bytes + 4
+    if net is not None:
+        new_cid = jnp.where(net.active > 0, new_cid, state.cluster_id)
+        new_cores = freeze_inactive(net.active, new_cores, state.cores)
+        new_heads = freeze_inactive(net.active, new_heads, state.heads)
 
     new_state = FacadeState(cores=new_cores, heads=new_heads,
                             cluster_id=new_cid, round=state.round + 1,
@@ -138,7 +148,7 @@ def facade_round(fcfg: FacadeConfig, binding: Binding, state: FacadeState,
     info = {
         "selection_losses": losses,
         "cluster_id": new_cid,
-        "round_bytes": jnp.asarray(sent_bytes, jnp.float32),
+        **comm_info(net, adj, payload, n * fcfg.degree),
     }
     return new_state, info
 

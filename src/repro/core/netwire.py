@@ -1,0 +1,37 @@
+"""Shared netsim plumbing for every round function (FACADE + baselines).
+
+Each algorithm's round follows the same contract: draw its topology,
+filter it through the round's network conditions, and — when a
+``netsim.RoundConditions`` is supplied — report the *effective* adjacency
+and per-message payload so the runner can feed the timing model. Keeping
+the logic here (used by ``facade_round`` and all four baselines alike)
+means adding another algorithm needs no netsim-specific code, and the
+byte-accounting contract lives in exactly one place.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import topology
+
+
+def masked_topology(net, adj):
+    """Apply the round's drop/churn masks (identity when ``net is None``)."""
+    if net is None:
+        return adj
+    return topology.effective_adjacency(adj, net.edge_mask, net.active)
+
+
+def comm_info(net, adj_eff, payload_bytes, nominal_sends):
+    """round_bytes accounting + netsim extras.
+
+    Without netsim, keep the historical nominal count (``n * degree``
+    directed pushes). Under netsim, count the directed edges that actually
+    carried a message this round.
+    """
+    if net is None:
+        return {"round_bytes": jnp.asarray(
+            nominal_sends * payload_bytes, jnp.float32)}
+    return {"round_bytes": adj_eff.sum() * payload_bytes,
+            "adj_eff": adj_eff,
+            "payload_bytes": jnp.asarray(payload_bytes, jnp.float32)}

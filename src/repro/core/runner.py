@@ -16,6 +16,7 @@ from repro.comm import CommLog
 from repro.data import pipeline
 from repro.fairness import demographic_parity, equalized_odds, fair_accuracy
 from repro.models import cnn as cnn_mod
+from repro import netsim
 
 from . import facade as facade_mod
 from . import split
@@ -81,8 +82,16 @@ def run_experiment(algo: str, cfg, dataset, *, rounds: int, k: int | None = None
                    lr: float = 0.05, eval_every: int = 20, seed: int = 0,
                    warmup_rounds: int = 0, head_jitter: float = 0.0,
                    target_acc: float | None = None,
+                   net: "netsim.NetworkConfig | None" = None,
                    verbose: bool = False) -> RunResult:
-    """Run one (algorithm, dataset) experiment end to end (CNN models)."""
+    """Run one (algorithm, dataset) experiment end to end (CNN models).
+
+    ``net``: optional :class:`repro.netsim.NetworkConfig` — simulate churn,
+    message loss, stragglers and link latency/bandwidth for ANY algorithm
+    (e.g. ``net=NetworkConfig.preset("edge-churn")``). The returned
+    ``CommLog`` then carries simulated wall-clock seconds next to bytes.
+    ``None`` keeps the historical ideal-medium path untouched.
+    """
     binding = make_binding(cfg)
     n = dataset.n_nodes
     k = k if k is not None else dataset.k
@@ -104,9 +113,9 @@ def run_experiment(algo: str, cfg, dataset, *, rounds: int, k: int | None = None
         round_main = jax.jit(functools.partial(
             facade_mod.facade_round, fcfg, binding, warmup=False))
 
-        def do_round(state, batches, rnd):
+        def do_round(state, batches, rnd, conds):
             fn = round_warm if rnd < warmup_rounds else round_main
-            return fn(state, batches)
+            return fn(state, batches, net=conds)
 
         def models_of(state):
             return facade_mod.node_models(state, binding)
@@ -121,13 +130,19 @@ def run_experiment(algo: str, cfg, dataset, *, rounds: int, k: int | None = None
                     "deprl": deprl_round, "dac": dac_round}[algo]
         stepper = jax.jit(functools.partial(round_fn, acfg, binding))
 
-        def do_round(state, batches, rnd):
-            return stepper(state, batches)
+        def do_round(state, batches, rnd, conds):
+            return stepper(state, batches, net=conds)
 
         def models_of(state):
             return state.params
     else:
         raise ValueError(f"unknown algorithm {algo!r}")
+
+    # --- netsim: per-round condition masks + timing model ---
+    if net is not None:
+        conds_fn = jax.jit(lambda rnd: netsim.round_conditions(net, n, rnd))
+        time_fn = jax.jit(functools.partial(
+            netsim.round_time, net, local_steps=local_steps))
 
     # --- training loop ---
     comm = CommLog()
@@ -138,7 +153,12 @@ def run_experiment(algo: str, cfg, dataset, *, rounds: int, k: int | None = None
         k_data, k_b = jax.random.split(k_data)
         batches = pipeline.sample_round_batches(
             k_b, train_x, train_y, local_steps, batch_size)
-        state, info = do_round(state, batches, rnd)
+        conds = conds_fn(rnd) if net is not None else None
+        state, info = do_round(state, batches, rnd, conds)
+        round_s = 0.0
+        if net is not None:
+            round_s = float(time_fn(info["adj_eff"], info["payload_bytes"],
+                                    conds.active, conds.straggler))
 
         last_round = rnd == rounds - 1
         if last_round and algo == "facade":
@@ -157,13 +177,14 @@ def run_experiment(algo: str, cfg, dataset, *, rounds: int, k: int | None = None
             mean_acc = float(np.mean(
                 [a * (np.asarray(dataset.node_cluster) == c).sum()
                  for c, a in enumerate(accs)]) * len(accs) / n)
-            comm.record(rnd + 1, float(info["round_bytes"]), mean_acc)
+            comm.record(rnd + 1, float(info["round_bytes"]), mean_acc,
+                        round_s=round_s)
             if verbose:
                 print(f"  [{algo}] round {rnd+1}: acc={accs} fair={fa:.3f}")
             if target_acc is not None and mean_acc >= target_acc:
                 break
         else:
-            comm.record(rnd + 1, float(info["round_bytes"]))
+            comm.record(rnd + 1, float(info["round_bytes"]), round_s=round_s)
         if algo == "facade":
             cluster_hist.append((rnd + 1, np.asarray(state.cluster_id)))
 

@@ -60,6 +60,15 @@ def init_baseline_state(binding, key, n: int, extra=None) -> BaselineState:
                          round=jnp.zeros((), jnp.int32), rng=k_rng)
 
 
+def freeze_inactive(active, new_tree, old_tree):
+    """netsim churn semantics: nodes with ``active == 0`` sat the round out,
+    so every leaf keeps its old value along the leading node axis."""
+    def pick(new, old):
+        m = active.reshape((active.shape[0],) + (1,) * (new.ndim - 1))
+        return jnp.where(m > 0, new, old).astype(new.dtype)
+    return jax.tree.map(pick, new_tree, old_tree)
+
+
 def node_model(state: FacadeState, i: int):
     """Merged (core, selected head) of node i — its deployable model."""
     core = jax.tree.map(lambda l: l[i], state.cores)

@@ -59,9 +59,20 @@ def fully_connected(n: int):
     return jnp.ones((n, n), jnp.float32) - jnp.eye(n)
 
 
+def effective_adjacency(adj, edge_mask, active):
+    """The adjacency that actually carried messages this round: drawn edges
+    masked by per-edge delivery (netsim drop model / partitions) and by both
+    endpoints being online. Stays symmetric when ``edge_mask`` is symmetric;
+    churned-out nodes end up with degree 0 (``mixing_matrix`` then gives
+    them the self-weight-1 row, i.e. they keep their own model)."""
+    return adj * edge_mask * active[:, None] * active[None, :]
+
+
 def mixing_matrix(adj):
     """Row-stochastic W with uniform weights over {neighbors} ∪ {self}:
-    W[i, j] = 1/(deg_i + 1) for j ∈ N(i) ∪ {i} (Eq. 3 aggregation)."""
+    W[i, j] = 1/(deg_i + 1) for j ∈ N(i) ∪ {i} (Eq. 3 aggregation).
+    Row-stochastic for ANY 0/1 adjacency, including zero-degree nodes
+    (the self edge keeps every denominator >= 1)."""
     n = adj.shape[0]
     a_hat = adj + jnp.eye(n)
     deg = a_hat.sum(axis=1, keepdims=True)

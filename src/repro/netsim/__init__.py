@@ -1,0 +1,38 @@
+"""repro.netsim — network-condition simulation for decentralized learning.
+
+The core algorithms model gossip over a free, instantaneous, perfectly
+reliable medium. This subsystem makes the medium a first-class simulated
+object so every algorithm (FACADE and all four baselines) can run under
+realistic conditions without per-algorithm forks:
+
+* :mod:`.conditions` — ``NetworkConfig`` (presets ``ideal`` / ``lan`` /
+  ``wan`` / ``edge-churn`` / ``hostile``) and ``round_conditions``: per-round
+  edge-drop, node-churn (join/leave schedules) and straggler masks;
+* :mod:`.timing` — a latency/bandwidth cost model turning per-round bytes +
+  effective topology into simulated wall-clock seconds (max over the
+  slowest active node/link), recorded on ``CommLog``'s time axis;
+* :mod:`.events` — seeded round-indexed scenarios (``BurstFailure``,
+  ``Partition``) for reproducible adversarial runs.
+
+Usage — every algorithm composes with every condition::
+
+    from repro.core.runner import run_experiment
+    from repro.netsim import NetworkConfig
+
+    res = run_experiment("facade", cfg, ds, rounds=100,
+                         net=NetworkConfig.preset("edge-churn"))
+    res.comm.total_gb         # cumulative traffic, as before
+    res.comm.total_hours      # NEW: simulated wall-clock to get there
+    res.comm.seconds_to_target(0.8)
+
+``net=None`` (the default) is the exact pre-netsim code path;
+``net=NetworkConfig.preset("ideal")`` runs the netsim path with all-ones
+masks and reproduces the same training trajectory bit-for-bit (byte
+accounting under netsim counts *actual* surviving directed edges rather
+than the nominal ``n * degree`` upper bound).
+"""
+from .conditions import (NetworkConfig, PRESETS, RoundConditions,  # noqa: F401
+                         availability, edge_mask, round_conditions,
+                         straggler_mask)
+from .events import BurstFailure, Partition, event_masks  # noqa: F401
+from .timing import link_seconds, round_time  # noqa: F401

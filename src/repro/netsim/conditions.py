@@ -1,0 +1,131 @@
+"""Vectorized network-condition models (churn, message loss, stragglers).
+
+Everything here is jit-friendly: a :class:`NetworkConfig` is static
+(hashable, closed over at trace time) and :func:`round_conditions` maps a
+round index to a :class:`RoundConditions` pytree of dense masks that the
+round functions in ``core/`` consume:
+
+* ``edge_mask [n, n]``  — 1 where the link delivered this round's message
+  (symmetric: gossip is push-pull, a lost exchange is lost both ways);
+* ``active [n]``        — 1 where the node is online this round (churn);
+* ``straggler [n]``     — 1 where the node is slow this round. Stragglers
+  still train and gossip — in a synchronous round they only stretch the
+  simulated wall-clock time (see :mod:`repro.netsim.timing`).
+
+Churn is drawn per *outage block* (``round // outage_rounds``) rather than
+per round, so an offline node stays offline for ``outage_rounds``
+consecutive rounds — a join/leave schedule, not per-round coin flips.
+All randomness derives from ``jax.random.fold_in`` on ``(seed, stream,
+round)``, so a given config replays the exact same schedule forever.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import events as events_mod
+
+_DROP, _CHURN, _STRAGGLE = 1, 2, 3   # per-stream fold_in tags
+
+
+class RoundConditions(NamedTuple):
+    """Dense per-round masks, all float32 in {0, 1}."""
+    edge_mask: Any       # [n, n] symmetric; 1 = message delivered
+    active: Any          # [n]    1 = node online
+    straggler: Any       # [n]    1 = node slow this round
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkConfig:
+    """Static description of the simulated network.
+
+    Presets (``NetworkConfig.preset(name)``): ``ideal`` (today's free
+    perfect medium), ``lan``, ``wan``, ``edge-churn`` (flaky edge devices,
+    the paper's motivating healthcare/edge deployment), ``hostile``
+    (stress test: heavy loss + churn + stragglers).
+    """
+    name: str = "custom"
+    drop_rate: float = 0.0           # P(undirected link loses this round's msg)
+    churn_rate: float = 0.0          # P(node offline in an outage block)
+    outage_rounds: int = 2           # length of one offline stretch (rounds)
+    straggler_rate: float = 0.0      # P(node is slow this round)
+    straggler_slowdown: float = 4.0  # compute/link time multiplier when slow
+    latency_s: float = 1e-3          # per-link one-way latency (seconds)
+    bandwidth_bps: float = 1e9       # per-link bandwidth (bytes/sec would be
+                                     # bps/8; we keep bits/sec like specs do)
+    compute_s_per_step: float = 0.05 # seconds per local SGD step (sim scale)
+    seed: int = 0                    # netsim's own stream; independent of
+                                     # the experiment seed by construction
+    events: tuple = ()               # round-indexed scenario (events.py)
+
+    @classmethod
+    def preset(cls, name: str, **overrides) -> "NetworkConfig":
+        if name not in PRESETS:
+            raise ValueError(
+                f"unknown netsim preset {name!r}; know {sorted(PRESETS)}")
+        kw = dict(PRESETS[name])
+        kw.update(overrides)
+        return cls(name=name, **kw)
+
+
+PRESETS: dict[str, dict] = {
+    # today's implicit model: free, instantaneous, perfectly reliable
+    "ideal": dict(drop_rate=0.0, churn_rate=0.0, straggler_rate=0.0,
+                  latency_s=0.0, bandwidth_bps=1e15),
+    # one rack: fast links, the odd busy machine
+    "lan": dict(drop_rate=0.0, churn_rate=0.0, straggler_rate=0.05,
+                straggler_slowdown=2.0, latency_s=5e-4, bandwidth_bps=10e9),
+    # cross-datacenter gossip
+    "wan": dict(drop_rate=0.01, churn_rate=0.02, straggler_rate=0.10,
+                straggler_slowdown=4.0, latency_s=5e-2, bandwidth_bps=1e8),
+    # flaky phones/hospital workstations joining and leaving
+    "edge-churn": dict(drop_rate=0.05, churn_rate=0.20, outage_rounds=3,
+                       straggler_rate=0.20, straggler_slowdown=6.0,
+                       latency_s=8e-2, bandwidth_bps=2e7),
+    # stress test for cluster-assignment stability
+    "hostile": dict(drop_rate=0.25, churn_rate=0.35, outage_rounds=4,
+                    straggler_rate=0.30, straggler_slowdown=10.0,
+                    latency_s=2e-1, bandwidth_bps=5e6),
+}
+
+
+# --------------------------------------------------------------------------
+def _stream(cfg: NetworkConfig, tag: int, rnd):
+    return jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(cfg.seed), tag), rnd)
+
+
+def edge_mask(cfg: NetworkConfig, n: int, rnd):
+    """Symmetric {0,1} [n, n]: 1 where the link delivers this round."""
+    u = jax.random.uniform(_stream(cfg, _DROP, rnd), (n, n))
+    upper = jnp.triu(u, 1)
+    u_sym = upper + upper.T                      # one coin per undirected edge
+    return (u_sym >= cfg.drop_rate).astype(jnp.float32)
+
+
+def availability(cfg: NetworkConfig, n: int, rnd):
+    """{0,1} [n]: node online this round. Constant over an outage block so
+    departures last ``outage_rounds`` rounds (join/leave schedule)."""
+    block = rnd // max(1, cfg.outage_rounds)
+    u = jax.random.uniform(_stream(cfg, _CHURN, block), (n,))
+    return (u >= cfg.churn_rate).astype(jnp.float32)
+
+
+def straggler_mask(cfg: NetworkConfig, n: int, rnd):
+    u = jax.random.uniform(_stream(cfg, _STRAGGLE, rnd), (n,))
+    return (u < cfg.straggler_rate).astype(jnp.float32)
+
+
+def round_conditions(cfg: NetworkConfig, n: int, rnd) -> RoundConditions:
+    """All masks for round ``rnd`` (deterministic in (cfg.seed, rnd));
+    composes the stochastic models with the scheduled events."""
+    edges = edge_mask(cfg, n, rnd)
+    active = availability(cfg, n, rnd)
+    strag = straggler_mask(cfg, n, rnd)
+    ev_active, ev_edges = events_mod.event_masks(cfg.seed, cfg.events, n, rnd)
+    return RoundConditions(edge_mask=edges * ev_edges,
+                           active=active * ev_active,
+                           straggler=strag)

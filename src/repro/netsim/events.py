@@ -1,0 +1,66 @@
+"""Seeded, round-indexed network event schedules.
+
+Stochastic conditions (conditions.py) model steady-state weather; events
+model *scenarios*: a rack loses power at round 40, the network partitions
+into two halves for 30 rounds and heals. Each event's victim set / group
+assignment is drawn once from ``fold_in(seed, event index)`` — NOT from the
+round — so the same nodes stay down for the whole window and the schedule
+replays identically under a fixed seed.
+
+All masks are computed with ``jnp.where`` on a traced round index, so the
+schedule is jit-compatible (events are static config; the round is data).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+_EVENT_TAG = 1000  # keeps event streams disjoint from conditions.py streams
+
+
+@dataclasses.dataclass(frozen=True)
+class BurstFailure:
+    """A random ``fraction`` of nodes goes dark for rounds
+    [start, start + duration)."""
+    start: int
+    duration: int
+    fraction: float
+
+
+@dataclasses.dataclass(frozen=True)
+class Partition:
+    """The network splits into ``groups`` random camps for rounds
+    [start, start + duration): links across camps drop every message, links
+    inside a camp are untouched. Then it heals."""
+    start: int
+    duration: int
+    groups: int = 2
+
+
+def _event_key(seed: int, idx: int):
+    return jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(seed), _EVENT_TAG), idx)
+
+
+def event_masks(seed: int, events: tuple, n: int, rnd):
+    """(avail [n], edge_ok [n, n]) float32 {0,1} masks for round ``rnd``;
+    all-ones when no event window covers the round."""
+    avail = jnp.ones((n,), jnp.float32)
+    edge_ok = jnp.ones((n, n), jnp.float32)
+    for idx, ev in enumerate(events):
+        if not isinstance(ev, (BurstFailure, Partition)):
+            raise TypeError(f"unknown netsim event {type(ev).__name__}")
+        key = _event_key(seed, idx)
+        in_window = jnp.logical_and(rnd >= ev.start,
+                                    rnd < ev.start + ev.duration)
+        if isinstance(ev, BurstFailure):
+            up = (jax.random.uniform(key, (n,)) >= ev.fraction)
+            up = up.astype(jnp.float32)
+            avail = avail * jnp.where(in_window, up, 1.0)
+        elif isinstance(ev, Partition):
+            camp = jax.random.randint(key, (n,), 0, ev.groups)
+            same = (camp[:, None] == camp[None, :]).astype(jnp.float32)
+            edge_ok = edge_ok * jnp.where(in_window, same, 1.0)
+    return avail, edge_ok

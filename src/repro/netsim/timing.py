@@ -1,0 +1,39 @@
+"""Latency/bandwidth cost model: bytes + topology -> simulated seconds.
+
+A synchronous gossip round finishes when the slowest active node has both
+(a) run its H local steps and (b) completed its slowest link exchange.
+Stragglers multiply their compute AND any link touching them (a slow
+uploader delays the receiver too). The result feeds ``CommLog``'s time
+axis so benchmarks can report "simulated hours to target accuracy", the
+companion to the paper's Fig. 7 "GB to target accuracy".
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def link_seconds(cfg, payload_bytes):
+    """One-message transfer time on a clean link (latency + serialization).
+    ``payload_bytes`` may be a python number or a traced jax scalar."""
+    return cfg.latency_s + 8.0 * payload_bytes / cfg.bandwidth_bps
+
+
+def round_time(cfg, adj_eff, payload_bytes, active, straggler,
+               local_steps: int):
+    """Simulated wall-clock seconds for one synchronous round.
+
+    adj_eff  [n, n]: effective (post-churn/post-drop) adjacency;
+    active    [n]:   {0,1} online mask (offline nodes don't gate the round);
+    straggler [n]:   {0,1} mask from this round's conditions.
+    An empty round (everyone churned out) costs 0 seconds.
+    """
+    adj_eff = jnp.asarray(adj_eff, jnp.float32)
+    active = jnp.asarray(active, jnp.float32)
+    straggler = jnp.asarray(straggler, jnp.float32)
+    slow = 1.0 + (cfg.straggler_slowdown - 1.0) * straggler        # [n]
+    base_link = link_seconds(cfg, payload_bytes)
+    # link (i, j) runs at the slower endpoint's pace; links run in parallel
+    pair_slow = jnp.maximum(slow[:, None], slow[None, :])          # [n, n]
+    comm = (adj_eff * pair_slow * base_link).max(axis=1)           # [n]
+    compute = local_steps * cfg.compute_s_per_step * slow          # [n]
+    return jnp.max((compute + comm) * active, initial=0.0)

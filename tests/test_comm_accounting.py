@@ -1,0 +1,52 @@
+"""CommLog: the time axis and the eval-only target-crossing semantics
+(backfilled accuracies on eval-less rounds must never satisfy a target)."""
+import pytest
+
+from repro.comm.accounting import CommLog, gb
+
+
+def test_backfilled_rounds_never_cross_target():
+    log = CommLog()
+    log.record(1, 100)              # no eval ran; acc backfills to 0.0
+    log.record(2, 100)
+    # old semantics would return bytes for any target <= 0.0 here
+    assert log.bytes_to_target(0.0) is None
+    log.record(3, 100, acc=0.9)
+    assert log.bytes_to_target(0.8) == 300
+    # later eval-less rounds inherit 0.9 for plotting but must not
+    # re-attribute the crossing
+    log.record(4, 100)
+    assert log.acc[-1] == 0.9 and log.evaled[-1] is False
+    assert log.bytes_to_target(0.8) == 300
+
+
+def test_crossing_attributed_to_measured_round_only():
+    log = CommLog()
+    log.record(1, 100, acc=0.5)
+    log.record(2, 100)              # carries 0.5 at 200 cumulative bytes
+    log.record(3, 100, acc=0.7)
+    # target between the two evals: credit the round that measured >= 0.6,
+    # not the backfilled middle round
+    assert log.bytes_to_target(0.6) == 300
+    assert log.bytes_to_target(0.5) == 100
+
+
+def test_time_axis_accumulates_and_queries():
+    log = CommLog()
+    log.record(1, 1000, acc=0.2, round_s=10.0)
+    log.record(2, 1000, round_s=5.0)
+    log.record(3, 1000, acc=0.9, round_s=5.0)
+    assert log.seconds == [10.0, 15.0, 20.0]
+    assert log.seconds_to_target(0.9) == 20.0
+    assert log.seconds_to_target(0.95) is None
+    assert log.total_hours == pytest.approx(20.0 / 3600.0)
+    assert log.total_gb == pytest.approx(3000 / 1e9)
+    assert gb(2e9) == 2.0
+
+
+def test_default_round_s_keeps_clock_at_zero():
+    log = CommLog()
+    log.record(1, 100, acc=0.1)
+    log.record(2, 100, acc=0.2)
+    assert log.seconds == [0.0, 0.0]
+    assert log.total_hours == 0.0

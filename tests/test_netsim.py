@@ -1,0 +1,242 @@
+"""repro.netsim: condition masks, timing model, event schedules, and the
+netsim path through facade/baseline rounds (ideal == bit-for-bit legacy)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.facade_paper import lenet
+from repro.core import facade as facade_mod
+from repro.core import topology
+from repro.core.baselines import (DACConfig, DeprlConfig, DpsgdConfig,
+                                  ELConfig, dac_round, deprl_round,
+                                  dpsgd_round, el_round, init_dac_extra)
+from repro.core.bindings import make_binding
+from repro.core.runner import run_experiment
+from repro.core.state import init_baseline_state, init_facade_state
+from repro.data.synthetic import SynthSpec, make_clustered_data
+from repro import netsim
+from repro.netsim import (BurstFailure, NetworkConfig, Partition,
+                          RoundConditions, round_conditions)
+
+N, K, H, B = 4, 2, 2, 4
+
+
+def _ones_conditions(n):
+    return RoundConditions(edge_mask=jnp.ones((n, n), jnp.float32),
+                           active=jnp.ones((n,), jnp.float32),
+                           straggler=jnp.zeros((n,), jnp.float32))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = lenet(smoke=True).replace(n_classes=4)
+    binding = make_binding(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1),
+                          (N, H, B, cfg.image_size, cfg.image_size, 3))
+    y = jax.random.randint(jax.random.PRNGKey(2), (N, H, B), 0, 4,
+                           dtype=jnp.int32)
+    return cfg, binding, {"x": x, "y": y}
+
+
+# ----------------------------------------------------------- conditions --
+def test_presets_exist_and_ideal_is_clean():
+    for name in ("ideal", "lan", "wan", "edge-churn", "hostile"):
+        NetworkConfig.preset(name)
+    ideal = NetworkConfig.preset("ideal")
+    c = round_conditions(ideal, 8, 0)
+    assert float(c.active.sum()) == 8
+    assert float(c.straggler.sum()) == 0
+    # every off-diagonal edge delivered
+    assert float((c.edge_mask * (1 - np.eye(8))).sum()) == 8 * 7
+    with pytest.raises(ValueError):
+        NetworkConfig.preset("nope")
+
+
+def test_conditions_deterministic_and_edge_mask_symmetric():
+    net = NetworkConfig.preset("hostile", seed=5)
+    a = round_conditions(net, 12, 7)
+    b = round_conditions(net, 12, 7)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    em = np.asarray(a.edge_mask)
+    np.testing.assert_array_equal(em, em.T)
+    assert set(np.unique(em)) <= {0.0, 1.0}
+
+
+def test_churn_respects_outage_blocks():
+    net = NetworkConfig.preset("edge-churn", seed=1)
+    L = net.outage_rounds
+    a0 = np.asarray(netsim.availability(net, 32, 0))
+    for r in range(1, L):
+        np.testing.assert_array_equal(
+            a0, np.asarray(netsim.availability(net, 32, r)))
+
+
+# ------------------------------------------------- masked mixing matrix --
+def test_masked_mixing_row_stochastic_with_zero_degree_nodes():
+    key = jax.random.PRNGKey(0)
+    adj = topology.random_regular(key, 10, 4)
+    active = jnp.asarray([1, 0, 1, 1, 0, 1, 1, 1, 0, 1], jnp.float32)
+    em = np.ones((10, 10), np.float32)
+    em[3, :] = em[:, 3] = 0.0            # node 3 loses every message too
+    eff = topology.effective_adjacency(adj, jnp.asarray(em), active)
+    w = np.asarray(topology.mixing_matrix(eff))
+    np.testing.assert_allclose(w.sum(1), 1.0, rtol=1e-6)
+    assert np.all(w >= 0)
+    # fully cut-off nodes keep exactly their own model
+    for i in (1, 3, 4, 8):
+        row = np.zeros(10); row[i] = 1.0
+        np.testing.assert_allclose(w[i], row)
+
+
+# ----------------------------------------------------------- facade path --
+def test_ideal_masks_reproduce_facade_round_bitforbit(setup):
+    cfg, binding, batches = setup
+    fcfg = facade_mod.FacadeConfig(n_nodes=N, k=K, degree=2, local_steps=H,
+                                   lr=0.05)
+    state = init_facade_state(binding, jax.random.PRNGKey(0), N, K)
+    s_ref, _ = facade_mod.facade_round(fcfg, binding, state, batches)
+    s_net, info = facade_mod.facade_round(fcfg, binding, state, batches,
+                                          net=_ones_conditions(N))
+    for a, b in zip(jax.tree.leaves(s_ref.cores), jax.tree.leaves(s_net.cores)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(s_ref.heads), jax.tree.leaves(s_net.heads)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(s_ref.cluster_id),
+                                  np.asarray(s_net.cluster_id))
+    assert "adj_eff" in info and "payload_bytes" in info
+
+
+def test_churned_out_node_is_frozen(setup):
+    cfg, binding, batches = setup
+    fcfg = facade_mod.FacadeConfig(n_nodes=N, k=K, degree=2, local_steps=H,
+                                   lr=0.05)
+    state = init_facade_state(binding, jax.random.PRNGKey(0), N, K)
+    state = state._replace(cluster_id=jnp.asarray([0, 1, 0, 1], jnp.int32))
+    conds = _ones_conditions(N)._replace(
+        active=jnp.asarray([1, 1, 0, 1], jnp.float32))
+    s2, _ = facade_mod.facade_round(fcfg, binding, state, batches, net=conds)
+    for old, new in zip(jax.tree.leaves(state.cores), jax.tree.leaves(s2.cores)):
+        np.testing.assert_array_equal(np.asarray(old)[2], np.asarray(new)[2])
+        assert not np.array_equal(np.asarray(old)[0], np.asarray(new)[0])
+    for old, new in zip(jax.tree.leaves(state.heads), jax.tree.leaves(s2.heads)):
+        np.testing.assert_array_equal(np.asarray(old)[2], np.asarray(new)[2])
+    assert int(s2.cluster_id[2]) == int(state.cluster_id[2])
+
+
+# --------------------------------------------------------- baseline path --
+BASELINES = [
+    ("el", ELConfig, el_round),
+    ("dpsgd", DpsgdConfig, dpsgd_round),
+    ("deprl", DeprlConfig, deprl_round),
+    ("dac", DACConfig, dac_round),
+]
+
+
+@pytest.mark.parametrize("name,cfg_cls,round_fn", BASELINES,
+                         ids=[b[0] for b in BASELINES])
+def test_baseline_ideal_bitforbit_and_freeze(name, cfg_cls, round_fn, setup):
+    cfg, binding, batches = setup
+    acfg = cfg_cls(n_nodes=N, degree=2, local_steps=H, lr=0.05)
+    extra = init_dac_extra(N) if name == "dac" else None
+    state = init_baseline_state(binding, jax.random.PRNGKey(0), N, extra=extra)
+
+    s_ref, _ = round_fn(acfg, binding, state, batches)
+    s_net, info = round_fn(acfg, binding, state, batches,
+                           net=_ones_conditions(N))
+    for a, b in zip(jax.tree.leaves(s_ref.params),
+                    jax.tree.leaves(s_net.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert "adj_eff" in info
+
+    conds = _ones_conditions(N)._replace(
+        active=jnp.asarray([1, 0, 1, 1], jnp.float32))
+    s_frozen, _ = round_fn(acfg, binding, state, batches, net=conds)
+    for old, new in zip(jax.tree.leaves(state.params),
+                        jax.tree.leaves(s_frozen.params)):
+        np.testing.assert_array_equal(np.asarray(old)[1], np.asarray(new)[1])
+
+
+# ---------------------------------------------------------------- events --
+def test_event_schedule_deterministic_and_windowed():
+    events = (BurstFailure(start=2, duration=3, fraction=0.5),
+              Partition(start=4, duration=2, groups=2))
+    net = NetworkConfig(name="evt", events=events, seed=9)
+    n = 16
+    # outside every window: clean masks
+    c = round_conditions(net, n, 0)
+    assert float(c.active.sum()) == n
+    # burst window: same victims on every covered round
+    a2 = np.asarray(round_conditions(net, n, 2).active)
+    a3 = np.asarray(round_conditions(net, n, 3).active)
+    np.testing.assert_array_equal(a2, a3)
+    assert 0 < a2.sum() < n
+    # heals after the window
+    assert float(round_conditions(net, n, 5).active.sum()) == n
+    # partition: cross-camp edges die, replays identically
+    e4 = np.asarray(round_conditions(net, n, 4).edge_mask)
+    e4b = np.asarray(round_conditions(net, n, 4).edge_mask)
+    np.testing.assert_array_equal(e4, e4b)
+    assert (e4 * (1 - np.eye(n))).sum() < n * (n - 1)
+    assert float(np.asarray(round_conditions(net, n, 6).edge_mask)
+                 [np.triu_indices(n, 1)].sum()) == n * (n - 1) / 2
+
+
+# ---------------------------------------------------------------- timing --
+def test_round_time_stragglers_and_empty_round():
+    net = NetworkConfig.preset("lan")
+    n = 4
+    adj = topology.ring(n, 2)
+    active = jnp.ones((n,))
+    none_slow = jnp.zeros((n,))
+    one_slow = jnp.zeros((n,)).at[0].set(1.0)
+    payload = 1e6
+    t0 = float(netsim.round_time(net, adj, payload, active, none_slow, 10))
+    t1 = float(netsim.round_time(net, adj, payload, active, one_slow, 10))
+    assert t1 > t0 > 0
+    # a straggler stretches the round by its compute slowdown
+    expect = 10 * net.compute_s_per_step * net.straggler_slowdown
+    assert t1 >= expect
+    # everyone offline -> free round
+    t_empty = float(netsim.round_time(net, jnp.zeros((n, n)), payload,
+                                      jnp.zeros((n,)), none_slow, 10))
+    assert t_empty == 0.0
+
+
+# ------------------------------------------------------------ end-to-end --
+@pytest.fixture(scope="module")
+def tiny_ds():
+    spec = SynthSpec(n_classes=4, image_size=16, samples_per_class=8,
+                     test_per_class=8, seed=3)
+    return make_clustered_data(spec, cluster_sizes=(3, 1),
+                               transforms=("rot0", "rot180"))
+
+
+def test_run_experiment_all_algos_under_edge_churn(tiny_ds, setup):
+    cfg, _, _ = setup
+    for algo in ("facade", "el", "dpsgd", "deprl", "dac"):
+        res = run_experiment(algo, cfg, tiny_ds, rounds=2, k=2, degree=2,
+                             local_steps=2, batch_size=4, lr=0.05,
+                             eval_every=1, seed=0,
+                             net=NetworkConfig.preset("edge-churn"))
+        assert len(res.comm.seconds) == 2
+        assert res.comm.seconds[-1] >= 0 and np.isfinite(res.comm.seconds[-1])
+        assert res.comm.bytes[-1] >= 0
+        assert all(np.isfinite(a) for a in res.final_acc)
+
+
+def test_run_experiment_ideal_matches_legacy_trajectory(tiny_ds, setup):
+    cfg, _, _ = setup
+    kw = dict(rounds=3, k=2, degree=2, local_steps=2, batch_size=4, lr=0.05,
+              eval_every=1, seed=0)
+    ref = run_experiment("facade", cfg, tiny_ds, **kw)
+    sim = run_experiment("facade", cfg, tiny_ds,
+                         net=NetworkConfig.preset("ideal"), **kw)
+    assert ref.acc_per_cluster == sim.acc_per_cluster
+    assert ref.fair_acc == sim.fair_acc
+    for (r1, c1), (r2, c2) in zip(ref.cluster_history, sim.cluster_history):
+        assert r1 == r2
+        np.testing.assert_array_equal(c1, c2)
+    # the simulated clock advances even on an ideal network (compute time)
+    assert sim.comm.seconds[-1] > 0
