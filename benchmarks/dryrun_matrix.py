@@ -43,11 +43,23 @@ def run(quick: bool = True) -> dict:
               f"({net_rec['sim_seconds']:.2f} sim-s, "
               f"{net_rec['total_bytes']/1e3:.1f} KB)")
 
+    # segment-engine smoke: one fused span, parity-checked vs the legacy
+    # driver (keeps the scan path from rotting); reported, never aborts
+    try:
+        from . import round_throughput
+        eng_rec = round_throughput.smoke()
+    except Exception as e:
+        eng_rec = {"status": "fail", "error": repr(e)}
+        print(f"engine smoke: FAIL ({e!r})")
+    else:
+        print(f"engine smoke: {eng_rec['status']} "
+              f"({eng_rec['total_bytes']/1e3:.1f} KB)")
+
     recs = [r for r in load("dryrun_*.jsonl") if r.get("tag", "") == ""]
     if not recs:
         print("no dry-run records; run `python -m repro.launch.dryrun --all` "
               "(and --multi-pod) first")
-        return {"netsim_smoke": net_rec}
+        return {"netsim_smoke": net_rec, "engine_smoke": eng_rec}
     rows = []
     ok = fail = skip = 0
     for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
@@ -72,7 +84,7 @@ def run(quick: bool = True) -> dict:
     print(f"\n{ok} compiled, {fail} failed, {skip} skipped "
           f"(full-attention long_500k carve-outs)")
     payload = {"n_ok": ok, "n_fail": fail, "n_skip": skip, "records": recs,
-               "netsim_smoke": net_rec}
+               "netsim_smoke": net_rec, "engine_smoke": eng_rec}
     common.save("dryrun_matrix", payload)
     return payload
 

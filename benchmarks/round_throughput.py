@@ -1,0 +1,204 @@
+"""Rounds/sec: the seed's per-round driver vs the scan-fused segment engine.
+
+The paper sweeps 5 algorithms x seeds x hundreds of rounds x netsim
+presets, so driver overhead — not model FLOPs — is what bounds sweep
+throughput. This benchmark therefore uses a deliberately small 32-node
+GN-LeNet config (8x8 images, width 2, 1 local step) where the per-round
+compute is a few ms and the driver dominates, and measures steady-state
+(round/segment programs compiled before timing starts).
+
+``legacy`` reproduces the seed driver faithfully, per round: eager batch
+sampling, one XLA dispatch, a forced device->host sync on
+``float(round_bytes)``, a per-round ``cluster_id`` transfer (FACADE), and
+— every ``eval_every`` rounds — the seed's evaluator: a fresh ``@jax.jit``
+closure (recompiles every eval) looping in Python over nodes x ragged
+batches. ``engine`` is this PR's path: one dispatch + one bulk host drain
+per 20-round segment (``SegmentEngine``) and the vmapped padded evaluator.
+
+Writes ``results/bench/BENCH_throughput.json``. Acceptance floor: the
+engine must sustain >= 3x the legacy rounds/sec for both benchmarked
+algorithms — FACADE (the paper's contribution, the heaviest round body)
+and EL (its primary baseline); ``min_speedup`` covers exactly these two.
+
+Note on sweeps: within one process, reuse ``algo_setup`` +
+``SegmentEngine`` + ``make_evaluator`` across runs (as ``_bench_algo``
+does) — ``run_experiment`` rebuilds them per call, so each call pays the
+segment compiles again.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm import CommLog
+from repro.core.bindings import make_binding
+from repro.core.engine import SegmentEngine
+from repro.core.runner import algo_setup, make_evaluator, run_experiment
+from repro.core.state import EngineCarry
+from repro.data import pipeline
+from repro.data.synthetic import SynthSpec, make_clustered_data
+from repro.models import cnn as cnn_mod
+from repro.models.base import CNNConfig
+from repro.configs.facade_paper import lenet
+
+from . import common
+
+N_NODES = 32
+EVAL_EVERY = 20
+LOCAL_STEPS = 1
+BATCH = 2
+
+
+def _config():
+    cfg = CNNConfig(name="lenet-micro", kind="lenet", image_size=8,
+                    width=2, n_classes=4)
+    spec = SynthSpec(n_classes=4, image_size=8, samples_per_class=8,
+                     test_per_class=16, seed=3)
+    half = N_NODES // 2
+    ds = make_clustered_data(spec, (half, N_NODES - half),
+                             ("rot0", "rot180"))
+    return cfg, ds
+
+
+def _seed_eval_models(cfg, models, node_cluster, test_x, test_y):
+    """The seed's ``_eval_models``, verbatim semantics: a FRESH ``@jax.jit``
+    closure per call (so every eval recompiles) and a Python loop over
+    nodes x ragged batches — the evaluation path this PR replaced."""
+    @jax.jit
+    def predict(params, x):
+        return jnp.argmax(cnn_mod.forward(cfg, params, x), -1)
+
+    accs = []
+    for c in range(len(test_x)):
+        nodes = [i for i in range(len(node_cluster))
+                 if node_cluster[i] == c]
+        cluster_accs = []
+        for i in nodes:
+            params_i = jax.tree.map(lambda l: l[i], models)
+            preds = np.concatenate(
+                [np.asarray(predict(params_i, test_x[c][j:j + 256]))
+                 for j in range(0, len(test_x[c]), 256)])
+            cluster_accs.append((preds == test_y[c]).mean())
+        accs.append(float(np.mean(cluster_accs)))
+    return accs
+
+
+def _legacy_driver(setup, cfg, ds, tx, ty, kd, rounds, start=0):
+    """The seed run_experiment loop: per-round dispatch + host syncs."""
+    comm = CommLog()
+    stepper = jax.jit(setup.round_fn)
+    state = setup.state
+    for rnd in range(start, start + rounds):
+        kd, kb = jax.random.split(kd)
+        batches = pipeline.sample_round_batches(kb, tx, ty, LOCAL_STEPS,
+                                                BATCH)
+        state, info = stepper(state, batches, net=None)
+        if (rnd + 1) % EVAL_EVERY == 0:
+            accs = _seed_eval_models(cfg, setup.models_of(state),
+                                     ds.node_cluster, ds.test_x, ds.test_y)
+            comm.record(rnd + 1, float(info["round_bytes"]),
+                        float(np.mean(accs)))
+        else:
+            comm.record(rnd + 1, float(info["round_bytes"]))
+        if setup.track_cluster:
+            _ = np.asarray(state.cluster_id)
+    return state
+
+
+def _engine_driver(eng, evaluator, setup, carry, tx, ty, rounds, start=0):
+    """This PR's path: one dispatch + one bulk drain per segment."""
+    comm = CommLog()
+    for s in range(start, start + rounds, EVAL_EVERY):
+        carry, outs = eng.run_segment(carry, s, EVAL_EVERY, tx, ty)
+        rnds = np.arange(s + 1, s + EVAL_EVERY + 1)
+        comm.record_bulk(rnds[:-1], outs["round_bytes"][:-1],
+                         outs["round_s"][:-1])
+        accs, _, _ = evaluator(setup.models_of(carry.state))
+        comm.record(int(rnds[-1]), float(outs["round_bytes"][-1]),
+                    float(np.mean(accs)))
+    return carry
+
+
+def _bench_algo(algo, cfg, ds, rounds):
+    binding = make_binding(cfg)
+    tx, ty = jnp.asarray(ds.train_x), jnp.asarray(ds.train_y)
+    kd = jax.random.PRNGKey(1)
+    setup = algo_setup(algo, binding, jax.random.PRNGKey(0), N_NODES, 2,
+                       degree=4, local_steps=LOCAL_STEPS, lr=0.05)
+
+    # --- legacy: warm the round program (the per-eval recompile is the
+    # seed's steady-state behavior and stays in the timed region) ---
+    _legacy_driver(setup, cfg, ds, tx, ty, kd, 2)
+    t0 = time.perf_counter()
+    _legacy_driver(setup, cfg, ds, tx, ty, kd, rounds)
+    t_legacy = time.perf_counter() - t0
+
+    # --- engine: warm one segment + the evaluator, then time fresh ---
+    eng = SegmentEngine(setup.round_fn, warmup_fn=setup.warmup_fn,
+                        n=N_NODES, local_steps=LOCAL_STEPS,
+                        batch_size=BATCH, track_cluster=setup.track_cluster)
+    evaluator = make_evaluator(binding, ds.node_cluster, ds.test_x,
+                               ds.test_y)
+    setup_w = algo_setup(algo, binding, jax.random.PRNGKey(0), N_NODES, 2,
+                         degree=4, local_steps=LOCAL_STEPS, lr=0.05)
+    _engine_driver(eng, evaluator, setup_w,
+                   EngineCarry(setup_w.state, jax.random.PRNGKey(1)),
+                   tx, ty, EVAL_EVERY)
+    setup_t = algo_setup(algo, binding, jax.random.PRNGKey(0), N_NODES, 2,
+                         degree=4, local_steps=LOCAL_STEPS, lr=0.05)
+    t0 = time.perf_counter()
+    _engine_driver(eng, evaluator, setup_t,
+                   EngineCarry(setup_t.state, jax.random.PRNGKey(1)),
+                   tx, ty, rounds)
+    t_engine = time.perf_counter() - t0
+
+    return {"legacy_rounds_per_sec": rounds / t_legacy,
+            "engine_rounds_per_sec": rounds / t_engine,
+            "speedup": t_legacy / t_engine}
+
+
+def run(quick: bool = True) -> dict:
+    rounds = 60 if quick else 200
+    cfg, ds = _config()
+    results, rows = {}, []
+    for algo in ("facade", "el"):
+        r = _bench_algo(algo, cfg, ds, rounds)
+        results[algo] = r
+        rows.append([algo, f"{r['legacy_rounds_per_sec']:.1f}",
+                     f"{r['engine_rounds_per_sec']:.1f}",
+                     f"{r['speedup']:.2f}x"])
+    print(common.table(["algo", "legacy r/s", "engine r/s", "speedup"],
+                       rows))
+    payload = {"n_nodes": N_NODES, "rounds": rounds,
+               "eval_every": EVAL_EVERY, "local_steps": LOCAL_STEPS,
+               "batch_size": BATCH, "results": results,
+               "min_speedup": min(r["speedup"] for r in results.values())}
+    out = common.save("BENCH_throughput", payload)
+    print(f"wrote {out} (min speedup {payload['min_speedup']:.2f}x)")
+    return payload
+
+
+def smoke() -> dict:
+    """Tiny engine exercise for the dry-run matrix: 4 nodes, fused
+    segments, parity-checked against the legacy per-round driver."""
+    cfg = lenet(smoke=True).replace(n_classes=4)
+    spec = SynthSpec(n_classes=4, image_size=16, samples_per_class=8,
+                     test_per_class=8, seed=3)
+    ds = make_clustered_data(spec, (3, 1), ("rot0", "rot180"))
+    kw = dict(rounds=4, k=2, degree=2, local_steps=2, batch_size=4,
+              lr=0.05, eval_every=2, seed=0)
+    ref = run_experiment("facade", cfg, ds, engine=False, **kw)
+    eng = run_experiment("facade", cfg, ds, engine=True, **kw)
+    ok = (ref.acc_per_cluster == eng.acc_per_cluster
+          and ref.comm.bytes == eng.comm.bytes
+          and np.isfinite(eng.comm.bytes[-1]))
+    return {"status": "ok" if ok else "fail",
+            "final_acc": [float(a) for a in eng.final_acc],
+            "total_bytes": float(eng.comm.bytes[-1])}
+
+
+if __name__ == "__main__":
+    run()

@@ -12,7 +12,8 @@ import time
 
 from . import (churn_resilience, color_shift, comm_cost, dryrun_matrix,
                fair_accuracy, fairness_dp_eo, k_sensitivity, kernel_bench,
-               label_skew, percluster_accuracy, settlement, warmup_ablation)
+               label_skew, percluster_accuracy, round_throughput, settlement,
+               warmup_ablation)
 
 SUITES = {
     "percluster_accuracy": percluster_accuracy,   # Fig. 3 / Tab. II
@@ -25,6 +26,7 @@ SUITES = {
     "label_skew": label_skew,                     # App. G
     "color_shift": color_shift,                   # App. H
     "churn_resilience": churn_resilience,         # netsim presets sweep
+    "round_throughput": round_throughput,         # segment engine rounds/sec
     "kernel_bench": kernel_bench,                 # kernels (systems)
     "dryrun_matrix": dryrun_matrix,               # §Dry-run / §Roofline
 }

@@ -37,6 +37,37 @@ class CommLog:
         else:
             self.acc.append(self.acc[-1] if self.acc else 0.0)
 
+    def record_bulk(self, rounds, round_bytes, round_s=None):
+        """Append a whole engine segment of eval-less rounds at once.
+
+        ``rounds`` / ``round_bytes`` / ``round_s`` are equal-length numpy
+        arrays (per-round values, NOT cumulative) drained from the device in
+        one host transfer — no per-round ``float()`` sync. Accuracy
+        backfills the last measured value (``evaled=False`` throughout), so
+        target queries never credit these rounds.
+
+        Accumulation matches :meth:`record` bit for bit: a sequential
+        float64 running sum seeded with the current total.
+        """
+        rounds = np.asarray(rounds)
+        rb = np.asarray(round_bytes, np.float64)
+        rs = (np.zeros_like(rb) if round_s is None
+              else np.asarray(round_s, np.float64))
+        if rounds.shape != rb.shape or rb.shape != rs.shape:
+            raise ValueError("record_bulk arrays must have equal length")
+        if rb.size == 0:
+            return
+        base_b = self.bytes[-1] if self.bytes else 0.0
+        base_s = self.seconds[-1] if self.seconds else 0.0
+        cum_b = np.cumsum(np.concatenate([[base_b], rb]))[1:]
+        cum_s = np.cumsum(np.concatenate([[base_s], rs]))[1:]
+        self.rounds.extend(int(r) for r in rounds)
+        self.bytes.extend(cum_b.tolist())
+        self.seconds.extend(cum_s.tolist())
+        last_acc = self.acc[-1] if self.acc else 0.0
+        self.acc.extend([last_acc] * rb.size)
+        self.evaled.extend([False] * rb.size)
+
     def _first_crossing(self, target_acc: float) -> int | None:
         for i, (a, e) in enumerate(zip(self.acc, self.evaled)):
             if e and a >= target_acc:

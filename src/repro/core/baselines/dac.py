@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from .. import split, topology
-from ..bindings import Binding
+from ..bindings import Binding, local_sgd
 from ..state import BaselineState, freeze_inactive
 from ..netwire import comm_info, masked_topology
 
@@ -70,15 +70,8 @@ def dac_round(cfg: DACConfig, binding: Binding, state: BaselineState,
         lambda p: jnp.einsum("ij,j...->i...", w.astype(p.dtype), p),
         state.params)
 
-    def local(p, bh):
-        def step(pp, b):
-            g = jax.grad(binding.loss)(pp, b)
-            return jax.tree.map(
-                lambda ww, gg: (ww - cfg.lr * gg).astype(ww.dtype), pp, g), None
-        pp, _ = jax.lax.scan(step, p, bh)
-        return pp
-
-    params = jax.vmap(local)(params, batches)
+    params = jax.vmap(lambda p, b: local_sgd(binding, p, b, cfg.lr))(
+        params, batches)
     if net is not None:
         params = freeze_inactive(net.active, params, state.params)
         new_sim = jnp.where(net.active[:, None] > 0, new_sim, sim)

@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from .. import split, topology
-from ..bindings import Binding
+from ..bindings import Binding, local_sgd
 from ..state import BaselineState, freeze_inactive
 from ..netwire import comm_info, masked_topology
 
@@ -39,14 +39,7 @@ def deprl_round(cfg: DeprlConfig, binding: Binding, state: BaselineState,
 
     def local(core, head, bh):
         p = split.merge_params(core, head)
-
-        def step(pp, b):
-            g = jax.grad(binding.loss)(pp, b)
-            return jax.tree.map(
-                lambda ww, gg: (ww - cfg.lr * gg).astype(ww.dtype), pp, g), None
-
-        p, _ = jax.lax.scan(step, p, bh)
-        return p
+        return local_sgd(binding, p, bh, cfg.lr)
 
     params = jax.vmap(local)(cores, heads, batches)
     if net is not None:

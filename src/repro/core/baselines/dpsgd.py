@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from .. import split, topology
-from ..bindings import Binding
+from ..bindings import Binding, local_sgd
 from ..state import BaselineState, freeze_inactive
 from ..netwire import comm_info, masked_topology
 
@@ -26,16 +26,9 @@ def dpsgd_round(cfg: DpsgdConfig, binding: Binding, state: BaselineState,
     adj = masked_topology(net, topology.ring(cfg.n_nodes, cfg.degree))
     w = topology.mixing_matrix(adj)
 
-    def local(p, bh):
-        def step(pp, b):
-            g = jax.grad(binding.loss)(pp, b)
-            return jax.tree.map(
-                lambda ww, gg: (ww - cfg.lr * gg).astype(ww.dtype), pp, g), None
-        pp, _ = jax.lax.scan(step, p, bh)
-        return pp
-
     # D-PSGD order: local train, then exchange+aggregate
-    params = jax.vmap(local)(state.params, batches)
+    params = jax.vmap(lambda p, b: local_sgd(binding, p, b, cfg.lr))(
+        state.params, batches)
     params = jax.tree.map(
         lambda p: jnp.einsum("ij,j...->i...", w.astype(p.dtype), p), params)
     if net is not None:

@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from .. import split, topology
-from ..bindings import Binding
+from ..bindings import Binding, local_sgd
 from ..state import BaselineState, freeze_inactive
 from ..netwire import comm_info, masked_topology
 
@@ -20,16 +20,6 @@ class ELConfig:
     degree: int = 4
     local_steps: int = 10
     lr: float = 0.05
-
-
-def _local_sgd(binding: Binding, params, batches_h, lr):
-    def step(p, b):
-        g = jax.grad(binding.loss)(p, b)
-        return jax.tree.map(lambda w, gg: (w - lr * gg).astype(w.dtype),
-                            p, g), None
-
-    params, _ = jax.lax.scan(step, params, batches_h)
-    return params
 
 
 def el_round(cfg: ELConfig, binding: Binding, state: BaselineState, batches,
@@ -44,7 +34,7 @@ def el_round(cfg: ELConfig, binding: Binding, state: BaselineState, batches,
     params = jax.tree.map(
         lambda p: jnp.einsum("ij,j...->i...", w.astype(p.dtype), p),
         state.params)
-    params = jax.vmap(lambda p, b: _local_sgd(binding, p, b, cfg.lr))(
+    params = jax.vmap(lambda p, b: local_sgd(binding, p, b, cfg.lr))(
         params, batches)
     if net is not None:
         params = freeze_inactive(net.active, params, state.params)

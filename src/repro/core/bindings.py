@@ -31,6 +31,22 @@ class Binding(NamedTuple):
     head_loss: Callable     # (head, feats, batch) -> scalar
 
 
+def local_sgd(binding: "Binding", params, batches_h, lr):
+    """H plain-SGD steps (paper step 2d) on one node's params.
+
+    ``batches_h``: pytree with leading [H, ...]. Shared by FACADE and every
+    baseline round function — one arithmetic definition keeps the scan
+    engine's parity guarantees algorithm-independent.
+    """
+    def step(p, batch):
+        g = jax.grad(binding.loss)(p, batch)
+        p = jax.tree.map(lambda w, gg: (w - lr * gg).astype(w.dtype), p, g)
+        return p, None
+
+    params, _ = jax.lax.scan(step, params, batches_h)
+    return params
+
+
 def _untie_lm_head(cfg, params, key):
     if "lm_head" not in params:
         params = dict(params)

@@ -1,0 +1,133 @@
+"""Scan-fused segment engine: whole eval-to-eval spans in one XLA dispatch.
+
+The legacy driver pays, per round: an eager ``sample_round_batches``, a
+jitted conditions call, a jitted round call, a jitted timing call, and a
+forced device->host sync (``float(round_bytes)``). At paper scale (5
+algorithms x seeds x hundreds of rounds x netsim presets) that per-round
+overhead dominates the tiny per-round compute.
+
+This module folds everything between two evals into one ``lax.scan``:
+
+* per-round batch sampling runs on device, keyed off a split of the
+  carried PRNG (bit-identical to the legacy eager sampling);
+* ``netsim.round_conditions`` is computed inside the scan from the scanned
+  round counter (``start + arange(length)``);
+* the algorithm round function — FACADE or any baseline, all sharing the
+  ``fn(state, batches, net=conds) -> (state, info)`` stepper signature —
+  advances the node-stacked state, which ``donate_argnums`` updates in
+  place instead of copying every round;
+* per-round scalars (``round_bytes``, simulated ``round_s``, FACADE's
+  cluster ids) come back stacked ``[length, ...]`` and are drained to the
+  host in ONE transfer per segment (``CommLog.record_bulk``).
+
+FACADE's warmup/main phase split is two compiled segment variants (the
+``warmup`` flag is static), so a run with warmup compiles at most
+``{lengths} x {warmup, main}`` segment programs; ``segment_plan`` cuts the
+round range at eval boundaries AND at the warmup->main boundary, never
+inside a phase. ``target_acc`` early exit therefore happens at segment
+granularity — exactly the rounds where the legacy driver evaluated.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import netsim
+from repro.data import pipeline
+
+from .netwire import round_seconds
+from .state import EngineCarry
+
+
+class Segment(NamedTuple):
+    start: int           # first round of the span (0-based)
+    length: int          # number of rounds fused into one dispatch
+    warmup: bool         # FACADE warmup phase? (static at compile time)
+    eval_at_end: bool    # the span's last round is an eval round
+
+
+def segment_plan(rounds: int, eval_every: int,
+                 warmup_rounds: int = 0) -> list[Segment]:
+    """Cut ``range(rounds)`` into scan segments.
+
+    Boundaries: every eval round (``(rnd+1) % eval_every == 0`` plus the
+    final round — the legacy driver's eval schedule) and the warmup->main
+    phase switch (a cut without an eval). Segments never straddle the
+    warmup boundary, so the per-segment ``warmup`` flag can stay static.
+    """
+    evals = set(range(eval_every, rounds + 1, eval_every))
+    if rounds > 0:
+        evals.add(rounds)
+    cuts = {0, rounds} | evals
+    if 0 < warmup_rounds < rounds:
+        cuts.add(warmup_rounds)
+    cuts = sorted(cuts)
+    return [Segment(a, b - a, a < warmup_rounds, b in evals)
+            for a, b in zip(cuts[:-1], cuts[1:])]
+
+
+class SegmentEngine:
+    """Compiles and runs eval-to-eval spans for one (algorithm, net) pair.
+
+    ``round_fn`` / ``warmup_fn``: the shared stepper signature
+    ``fn(state, batches, net=conds) -> (state, info)`` where ``info``
+    carries ``round_bytes`` (+ ``adj_eff``/``payload_bytes`` under netsim,
+    + ``cluster_id`` for FACADE). Compiled segment programs are cached per
+    ``(length, warmup)``; carries are donated, so the caller must treat the
+    passed-in ``EngineCarry`` as consumed.
+    """
+
+    def __init__(self, round_fn: Callable, *, n: int, local_steps: int,
+                 batch_size: int, net=None, warmup_fn: Callable | None = None,
+                 track_cluster: bool = False):
+        self._round = round_fn
+        self._warm = warmup_fn if warmup_fn is not None else round_fn
+        self._net = net
+        self._n = n
+        self._h = local_steps
+        self._b = batch_size
+        self._track = track_cluster
+        self._compiled: dict[tuple[int, bool], Callable] = {}
+
+    # -- one segment = one jitted scan --------------------------------------
+    def _build(self, length: int, warmup: bool) -> Callable:
+        round_fn = self._warm if warmup else self._round
+        net, n, h, b, track = self._net, self._n, self._h, self._b, self._track
+
+        def segment(carry, start, train_x, train_y):
+            def step(carry, rnd):
+                state, k_data = carry
+                k_data, k_b = jax.random.split(k_data)
+                batches = pipeline.sample_round_batches(
+                    k_b, train_x, train_y, h, b)
+                conds = (netsim.round_conditions(net, n, rnd)
+                         if net is not None else None)
+                state, info = round_fn(state, batches, net=conds)
+                out = {"round_bytes": info["round_bytes"],
+                       "round_s": round_seconds(net, info, conds, h)}
+                if track:
+                    out["cluster_id"] = info["cluster_id"]
+                return EngineCarry(state, k_data), out
+
+            rnds = start + jnp.arange(length, dtype=jnp.int32)
+            return jax.lax.scan(step, carry, rnds)
+
+        return jax.jit(segment, donate_argnums=(0,))
+
+    def run_segment(self, carry: EngineCarry, start: int, length: int,
+                    train_x, train_y, warmup: bool = False):
+        """Advance ``length`` rounds in one dispatch.
+
+        Returns ``(new_carry, outs)`` where ``outs`` is a dict of host
+        numpy arrays with leading axis ``length`` — the segment's only
+        device->host transfer.
+        """
+        key = (length, warmup)
+        fn = self._compiled.get(key)
+        if fn is None:
+            fn = self._compiled[key] = self._build(length, warmup)
+        carry, outs = fn(carry, jnp.asarray(start, jnp.int32),
+                         train_x, train_y)
+        return carry, jax.device_get(outs)

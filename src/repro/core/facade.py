@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from . import split, topology
-from .bindings import Binding
+from .bindings import Binding, local_sgd
 from .netwire import comm_info, masked_topology
 from .state import FacadeState, freeze_inactive
 
@@ -76,17 +76,6 @@ def _select_heads(binding: Binding, cores, heads, batches):
     return jax.vmap(per_node)(cores, heads, batches)        # [n, k]
 
 
-def _local_sgd(binding: Binding, params, batches_h, lr: float):
-    """H plain-SGD steps (paper step 2d). batches_h: leading [H, ...]."""
-    def step(p, batch):
-        g = jax.grad(binding.loss)(p, batch)
-        p = jax.tree.map(lambda w, gg: (w - lr * gg).astype(w.dtype), p, g)
-        return p, None
-
-    params, _ = jax.lax.scan(step, params, batches_h)
-    return params
-
-
 # --------------------------------------------------------------------------
 def facade_round(fcfg: FacadeConfig, binding: Binding, state: FacadeState,
                  batches, warmup: bool = False, net=None):
@@ -120,7 +109,7 @@ def facade_round(fcfg: FacadeConfig, binding: Binding, state: FacadeState,
     def train_node(core, heads_k, cid, node_batches):
         head = split.select_head(heads_k, cid)
         params = split.merge_params(core, head)
-        params = _local_sgd(binding, params, node_batches, fcfg.lr)
+        params = local_sgd(binding, params, node_batches, fcfg.lr)
         new_core, new_head = split.split_params(params, binding.head_keys)
         if warmup:  # broadcast the trained head to every slot
             heads_k = split.stack_heads(new_head, k)

@@ -12,6 +12,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro import netsim
+
 from . import topology
 
 
@@ -35,3 +37,17 @@ def comm_info(net, adj_eff, payload_bytes, nominal_sends):
     return {"round_bytes": adj_eff.sum() * payload_bytes,
             "adj_eff": adj_eff,
             "payload_bytes": jnp.asarray(payload_bytes, jnp.float32)}
+
+
+def round_seconds(net, info, conds, local_steps: int):
+    """Simulated wall-clock for one round from its ``comm_info`` dict.
+
+    Always a float32 scalar (0 when netsim is off) so the segment engine
+    can stack it as a scan output; the legacy per-round driver feeds the
+    same ingredients to :func:`repro.netsim.round_time` directly.
+    """
+    if net is None:
+        return jnp.float32(0.0)
+    return netsim.round_time(net, info["adj_eff"], info["payload_bytes"],
+                             conds.active, conds.straggler,
+                             local_steps=local_steps)

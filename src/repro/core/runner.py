@@ -1,12 +1,22 @@
 """Experiment runner: drives any DL algorithm (FACADE / EL / D-PSGD / DEPRL
 / DAC) over a clustered dataset, evaluating per-cluster accuracy, fairness
 metrics and communication volume — the harness behind every paper table.
+
+Two interchangeable drivers share all setup and evaluation code:
+
+* ``engine=True`` (default): the scan-fused segment engine
+  (:mod:`repro.core.engine`) — one XLA dispatch and one device->host
+  transfer per eval-to-eval span, donated state buffers;
+* ``engine=False``: the legacy per-round Python loop, kept as the parity
+  reference and the baseline for ``benchmarks/round_throughput.py``.
+
+Both produce bit-identical trajectories for the same seed.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -19,12 +29,13 @@ from repro.models import cnn as cnn_mod
 from repro import netsim
 
 from . import facade as facade_mod
-from . import split
+from . import netwire
 from .baselines import (DACConfig, DeprlConfig, DpsgdConfig, ELConfig,
                         dac_round, deprl_round, dpsgd_round, el_round,
                         init_dac_extra)
 from .bindings import Binding, make_binding
-from .state import (init_baseline_state, init_facade_state)
+from .engine import SegmentEngine, segment_plan
+from .state import EngineCarry, init_baseline_state, init_facade_state
 
 
 @dataclasses.dataclass
@@ -43,37 +54,145 @@ class RunResult:
 
 
 # --------------------------------------------------------------------------
-def _eval_models(binding: Binding, models, node_cluster, test_x, test_y,
-                 batch: int = 256):
-    """models: stacked [n, ...]; evaluate each node on ITS cluster's test
-    set; returns (acc_per_cluster, preds/labels per cluster for DP/EO)."""
+class AlgoSetup(NamedTuple):
+    """Everything the drivers need, behind one stepper signature:
+    ``round_fn(state, batches, net=conds) -> (state, info)``."""
+    state: Any                 # initial stacked state
+    round_fn: Callable         # main-phase round
+    warmup_fn: Callable        # warmup-phase round (== round_fn off-FACADE)
+    models_of: Callable        # state -> deployable models, stacked [n, ...]
+    finalize: Callable         # applied to the state after the last round
+    track_cluster: bool        # info carries a per-round cluster_id [n]
+
+
+def algo_setup(algo: str, binding: Binding, key, n: int, k: int, *,
+               degree: int, local_steps: int, lr: float,
+               warmup_rounds: int = 0,
+               head_jitter: float = 0.0) -> AlgoSetup:
+    if algo == "facade":
+        fcfg = facade_mod.FacadeConfig(
+            n_nodes=n, k=k, degree=degree, local_steps=local_steps, lr=lr,
+            warmup_rounds=warmup_rounds, head_jitter=head_jitter)
+        state = init_facade_state(binding, key, n, k,
+                                  head_jitter=head_jitter)
+        return AlgoSetup(
+            state=state,
+            round_fn=functools.partial(facade_mod.facade_round, fcfg,
+                                       binding, warmup=False),
+            warmup_fn=functools.partial(facade_mod.facade_round, fcfg,
+                                        binding, warmup=True),
+            models_of=lambda s: facade_mod.node_models(s, binding),
+            finalize=functools.partial(facade_mod.final_allreduce, fcfg),
+            track_cluster=True)
+    if algo in ("el", "dpsgd", "deprl", "dac"):
+        cfg_cls = {"el": ELConfig, "dpsgd": DpsgdConfig,
+                   "deprl": DeprlConfig, "dac": DACConfig}[algo]
+        acfg = cfg_cls(n_nodes=n, degree=degree, local_steps=local_steps,
+                       lr=lr)
+        extra = init_dac_extra(n) if algo == "dac" else None
+        state = init_baseline_state(binding, key, n, extra=extra)
+        round_fn = {"el": el_round, "dpsgd": dpsgd_round,
+                    "deprl": deprl_round, "dac": dac_round}[algo]
+        fn = functools.partial(round_fn, acfg, binding)
+        return AlgoSetup(state=state, round_fn=fn, warmup_fn=fn,
+                         models_of=lambda s: s.params,
+                         finalize=lambda s: s, track_cluster=False)
+    raise ValueError(f"unknown algorithm {algo!r}")
+
+
+# --------------------------------------------------------------------------
+def make_evaluator(binding: Binding, node_cluster, test_x, test_y,
+                   batch: int = 256) -> Callable:
+    """Vmapped, padded per-cluster evaluator.
+
+    Replaces the legacy Python node-loop: every node of a cluster runs the
+    whole (zero-padded, masked) test set in ONE jit dispatch per cluster —
+    a ``lax.map`` over fixed-shape eval batches with the node axis vmapped
+    inside. Built once per experiment so compiles are reused across evals.
+
+    Returns ``evaluate(models) -> (acc_per_cluster, preds_c, labels_c)``
+    with the same contract as the legacy evaluator: per-cluster mean node
+    accuracy, plus the first node's predictions per cluster for DP/EO.
+    """
     cfg = binding.cfg
-    k = len(test_x)
-    n = len(node_cluster)
+    node_cluster = np.asarray(node_cluster)
+    clusters = []
+    for c in range(len(test_x)):
+        x = np.asarray(test_x[c])
+        # cap the batch at the test-set size: padding waste stays < one row
+        xb, mask = pipeline.padded_eval_batches(
+            x, min(batch, max(1, x.shape[0])))
+        clusters.append((np.where(node_cluster == c)[0], jnp.asarray(xb),
+                         mask.reshape(-1) > 0, np.asarray(test_y[c])))
 
     @jax.jit
-    def predict(params, x):
-        logits = cnn_mod.forward(cfg, params, x)
-        return jnp.argmax(logits, -1)
+    def predict(models_c, xb):                       # xb [nb, B, ...]
+        def per_batch(x):
+            logits = jax.vmap(
+                lambda p: cnn_mod.forward(cfg, p, x))(models_c)
+            return jnp.argmax(logits, -1)            # [m, B]
 
-    accs, preds_c, labels_c = [], [], []
-    for c in range(k):
-        nodes = [i for i in range(n) if node_cluster[i] == c]
-        cluster_accs, cluster_preds = [], []
-        for i in nodes:
-            params_i = jax.tree.map(lambda l: l[i], models)
-            preds = []
-            for xb, yb in zip(pipeline.eval_batches(test_x[c], batch),
-                              pipeline.eval_batches(test_y[c], batch)):
-                preds.append(np.asarray(predict(params_i, xb)))
-            preds = np.concatenate(preds)
-            cluster_accs.append((preds == test_y[c]).mean())
-            cluster_preds.append(preds)
-        accs.append(float(np.mean(cluster_accs)))
-        # use the first node of the cluster as the DP/EO representative
-        preds_c.append(cluster_preds[0])
-        labels_c.append(test_y[c])
-    return accs, preds_c, labels_c
+        return jax.lax.map(per_batch, xb)            # [nb, m, B]
+
+    def evaluate(models):
+        accs, preds_c, labels_c = [], [], []
+        for idx, xb, valid, y in clusters:
+            models_c = jax.tree.map(lambda l: l[idx], models)
+            p = np.asarray(predict(models_c, xb))    # [nb, m, B]
+            p = np.moveaxis(p, 1, 0).reshape(len(idx), -1)[:, valid]
+            accs.append(float((p == y[None, :]).mean()))
+            preds_c.append(p[0])
+            labels_c.append(y)
+        return accs, preds_c, labels_c
+
+    return evaluate
+
+
+# --------------------------------------------------------------------------
+class _History:
+    """Shared bookkeeping for both drivers: comm log, eval histories,
+    weighted mean accuracy and the target-accuracy stop condition."""
+
+    def __init__(self, node_cluster, n: int, evaluator, models_of,
+                 target_acc, verbose: bool, algo: str, n_classes: int):
+        self.comm = CommLog()
+        self.acc_hist, self.fair_hist, self.cluster_hist = [], [], []
+        self.dp = self.eo = 0.0
+        self.accs = []
+        self._weights = np.asarray(node_cluster)
+        self._n = n
+        self._evaluator = evaluator
+        self._models_of = models_of
+        self._target = target_acc
+        self._verbose = verbose
+        self._algo = algo
+        self._n_classes = n_classes
+
+    def eval_round(self, state, rnd: int, round_bytes: float,
+                   round_s: float) -> bool:
+        """Evaluate at round ``rnd`` (1-based), record, and report whether
+        ``target_acc`` is reached (the driver then stops)."""
+        models = self._models_of(state)
+        accs, preds_c, labels_c = self._evaluator(models)
+        self.accs = accs
+        self.acc_hist.append((rnd, accs))
+        fa = fair_accuracy(accs)
+        self.fair_hist.append((rnd, fa))
+        self.dp = demographic_parity(preds_c, self._n_classes)
+        self.eo = equalized_odds(preds_c, labels_c, self._n_classes)
+        mean_acc = float(np.mean(
+            [a * (self._weights == c).sum()
+             for c, a in enumerate(accs)]) * len(accs) / self._n)
+        self.comm.record(rnd, round_bytes, mean_acc, round_s=round_s)
+        if self._verbose:
+            print(f"  [{self._algo}] round {rnd}: acc={accs} fair={fa:.3f}")
+        return self._target is not None and mean_acc >= self._target
+
+    def result(self, algo: str) -> RunResult:
+        return RunResult(algo=algo, acc_per_cluster=self.acc_hist,
+                         fair_acc=self.fair_hist, dp=self.dp, eo=self.eo,
+                         comm=self.comm, cluster_history=self.cluster_hist,
+                         final_acc=self.accs)
 
 
 # --------------------------------------------------------------------------
@@ -83,6 +202,7 @@ def run_experiment(algo: str, cfg, dataset, *, rounds: int, k: int | None = None
                    warmup_rounds: int = 0, head_jitter: float = 0.0,
                    target_acc: float | None = None,
                    net: "netsim.NetworkConfig | None" = None,
+                   engine: bool = True,
                    verbose: bool = False) -> RunResult:
     """Run one (algorithm, dataset) experiment end to end (CNN models).
 
@@ -91,6 +211,10 @@ def run_experiment(algo: str, cfg, dataset, *, rounds: int, k: int | None = None
     (e.g. ``net=NetworkConfig.preset("edge-churn")``). The returned
     ``CommLog`` then carries simulated wall-clock seconds next to bytes.
     ``None`` keeps the historical ideal-medium path untouched.
+
+    ``engine``: ``True`` compiles whole eval-to-eval spans into one XLA
+    dispatch (scan-fused segment engine, the fast path); ``False`` runs the
+    legacy per-round loop. Same seed => bit-identical trajectories.
     """
     binding = make_binding(cfg)
     n = dataset.n_nodes
@@ -101,93 +225,94 @@ def run_experiment(algo: str, cfg, dataset, *, rounds: int, k: int | None = None
     train_x = jnp.asarray(dataset.train_x)
     train_y = jnp.asarray(dataset.train_y)
 
-    # --- algorithm setup ---
-    if algo == "facade":
-        fcfg = facade_mod.FacadeConfig(
-            n_nodes=n, k=k, degree=degree, local_steps=local_steps, lr=lr,
-            warmup_rounds=warmup_rounds, head_jitter=head_jitter)
-        state = init_facade_state(binding, k_init, n, k,
-                                  head_jitter=head_jitter)
-        round_warm = jax.jit(functools.partial(
-            facade_mod.facade_round, fcfg, binding, warmup=True))
-        round_main = jax.jit(functools.partial(
-            facade_mod.facade_round, fcfg, binding, warmup=False))
+    setup = algo_setup(algo, binding, k_init, n, k, degree=degree,
+                       local_steps=local_steps, lr=lr,
+                       warmup_rounds=warmup_rounds, head_jitter=head_jitter)
+    evaluator = make_evaluator(binding, dataset.node_cluster,
+                               dataset.test_x, dataset.test_y)
+    hist = _History(dataset.node_cluster, n, evaluator, setup.models_of,
+                    target_acc, verbose, algo, binding.cfg.n_classes)
+    driver = _drive_engine if engine else _drive_legacy
+    driver(setup, hist, k_data, train_x, train_y, rounds=rounds,
+           eval_every=eval_every,
+           warmup_rounds=warmup_rounds if algo == "facade" else 0,
+           local_steps=local_steps, batch_size=batch_size, net=net, n=n)
+    return hist.result(algo)
 
-        def do_round(state, batches, rnd, conds):
-            fn = round_warm if rnd < warmup_rounds else round_main
-            return fn(state, batches, net=conds)
 
-        def models_of(state):
-            return facade_mod.node_models(state, binding)
-    elif algo in ("el", "dpsgd", "deprl", "dac"):
-        cfg_cls = {"el": ELConfig, "dpsgd": DpsgdConfig,
-                   "deprl": DeprlConfig, "dac": DACConfig}[algo]
-        acfg = cfg_cls(n_nodes=n, degree=degree, local_steps=local_steps,
-                       lr=lr)
-        extra = init_dac_extra(n) if algo == "dac" else None
-        state = init_baseline_state(binding, k_init, n, extra=extra)
-        round_fn = {"el": el_round, "dpsgd": dpsgd_round,
-                    "deprl": deprl_round, "dac": dac_round}[algo]
-        stepper = jax.jit(functools.partial(round_fn, acfg, binding))
+# --------------------------------------------------------------------------
+def _drive_engine(setup: AlgoSetup, hist: _History, k_data, train_x, train_y,
+                  *, rounds, eval_every, warmup_rounds, local_steps,
+                  batch_size, net, n):
+    """Segment-engine driver: one dispatch + one host transfer per span."""
+    eng = SegmentEngine(setup.round_fn, warmup_fn=setup.warmup_fn, net=net,
+                        n=n, local_steps=local_steps, batch_size=batch_size,
+                        track_cluster=setup.track_cluster)
+    carry = EngineCarry(setup.state, k_data)
+    for seg in segment_plan(rounds, eval_every, warmup_rounds):
+        carry, outs = eng.run_segment(carry, seg.start, seg.length,
+                                      train_x, train_y, warmup=seg.warmup)
+        rnds = np.arange(seg.start + 1, seg.start + seg.length + 1)
+        hit = False
+        if seg.eval_at_end:
+            hist.comm.record_bulk(rnds[:-1], outs["round_bytes"][:-1],
+                                  outs["round_s"][:-1])
+            state = carry.state
+            if seg.start + seg.length == rounds:
+                state = setup.finalize(state)
+                carry = carry._replace(state=state)
+            hit = hist.eval_round(state, int(rnds[-1]),
+                                  float(outs["round_bytes"][-1]),
+                                  float(outs["round_s"][-1]))
+        else:
+            hist.comm.record_bulk(rnds, outs["round_bytes"],
+                                  outs["round_s"])
+        if setup.track_cluster:
+            # legacy parity: on a target_acc hit the loop broke BEFORE
+            # appending the eval round's cluster ids
+            upto = len(rnds) - 1 if hit else len(rnds)
+            for i in range(upto):
+                hist.cluster_hist.append(
+                    (int(rnds[i]), np.asarray(outs["cluster_id"][i])))
+        if hit:
+            break
 
-        def do_round(state, batches, rnd, conds):
-            return stepper(state, batches, net=conds)
 
-        def models_of(state):
-            return state.params
-    else:
-        raise ValueError(f"unknown algorithm {algo!r}")
-
-    # --- netsim: per-round condition masks + timing model ---
+def _drive_legacy(setup: AlgoSetup, hist: _History, k_data, train_x, train_y,
+                  *, rounds, eval_every, warmup_rounds, local_steps,
+                  batch_size, net, n):
+    """Legacy per-round driver: eager sampling, one jitted dispatch per
+    round, per-round host syncs. Kept as the engine's parity reference and
+    the benchmark baseline."""
+    round_main = jax.jit(setup.round_fn)
+    round_warm = jax.jit(setup.warmup_fn)
     if net is not None:
         conds_fn = jax.jit(lambda rnd: netsim.round_conditions(net, n, rnd))
         time_fn = jax.jit(functools.partial(
-            netsim.round_time, net, local_steps=local_steps))
+            netwire.round_seconds, net, local_steps=local_steps))
 
-    # --- training loop ---
-    comm = CommLog()
-    acc_hist, fair_hist, cluster_hist = [], [], []
-    dp = eo = 0.0
-    accs = []
+    state = setup.state
     for rnd in range(rounds):
         k_data, k_b = jax.random.split(k_data)
         batches = pipeline.sample_round_batches(
             k_b, train_x, train_y, local_steps, batch_size)
         conds = conds_fn(rnd) if net is not None else None
-        state, info = do_round(state, batches, rnd, conds)
+        fn = round_warm if rnd < warmup_rounds else round_main
+        state, info = fn(state, batches, net=conds)
         round_s = 0.0
         if net is not None:
-            round_s = float(time_fn(info["adj_eff"], info["payload_bytes"],
-                                    conds.active, conds.straggler))
+            round_s = float(time_fn(info, conds))
 
         last_round = rnd == rounds - 1
-        if last_round and algo == "facade":
-            state = facade_mod.final_allreduce(
-                facade_mod.FacadeConfig(n_nodes=n, k=k, degree=degree), state)
+        if last_round:
+            state = setup.finalize(state)
         if (rnd + 1) % eval_every == 0 or last_round:
-            models = models_of(state)
-            accs, preds_c, labels_c = _eval_models(
-                binding, models, dataset.node_cluster,
-                dataset.test_x, dataset.test_y)
-            acc_hist.append((rnd + 1, accs))
-            fa = fair_accuracy(accs)
-            fair_hist.append((rnd + 1, fa))
-            dp = demographic_parity(preds_c, binding.cfg.n_classes)
-            eo = equalized_odds(preds_c, labels_c, binding.cfg.n_classes)
-            mean_acc = float(np.mean(
-                [a * (np.asarray(dataset.node_cluster) == c).sum()
-                 for c, a in enumerate(accs)]) * len(accs) / n)
-            comm.record(rnd + 1, float(info["round_bytes"]), mean_acc,
-                        round_s=round_s)
-            if verbose:
-                print(f"  [{algo}] round {rnd+1}: acc={accs} fair={fa:.3f}")
-            if target_acc is not None and mean_acc >= target_acc:
+            if hist.eval_round(state, rnd + 1, float(info["round_bytes"]),
+                               round_s):
                 break
         else:
-            comm.record(rnd + 1, float(info["round_bytes"]), round_s=round_s)
-        if algo == "facade":
-            cluster_hist.append((rnd + 1, np.asarray(state.cluster_id)))
-
-    return RunResult(algo=algo, acc_per_cluster=acc_hist, fair_acc=fair_hist,
-                     dp=dp, eo=eo, comm=comm, cluster_history=cluster_hist,
-                     final_acc=accs)
+            hist.comm.record(rnd + 1, float(info["round_bytes"]),
+                             round_s=round_s)
+        if setup.track_cluster:
+            hist.cluster_hist.append(
+                (rnd + 1, np.asarray(state.cluster_id)))

@@ -30,6 +30,15 @@ class BaselineState(NamedTuple):
     rng: Any
 
 
+class EngineCarry(NamedTuple):
+    """Scan carry of the segment engine (core/engine.py): the algorithm
+    state plus the data-sampling PRNG key. The round counter rides in the
+    scanned xs, so the whole carry is donated buffer-for-buffer between
+    segments (``donate_argnums``) — node-stacked params update in place."""
+    state: Any           # FacadeState | BaselineState
+    k_data: Any          # PRNG key consumed by pipeline.sample_round_batches
+
+
 def _stack_n(tree, n):
     return jax.tree.map(
         lambda l: jnp.broadcast_to(l[None], (n,) + l.shape).copy(), tree)

@@ -1,4 +1,4 @@
-from .pipeline import (eval_batches, sample_round_batches,  # noqa: F401
+from .pipeline import (padded_eval_batches, sample_round_batches,  # noqa: F401
                        sample_round_token_batches)
 from .synthetic import (ClusteredDataset, SynthSpec, apply_transform,  # noqa: F401
                         make_clustered_data)

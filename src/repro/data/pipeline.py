@@ -36,7 +36,19 @@ def sample_round_token_batches(key, train_tokens, h: int, b: int):
     }
 
 
-def eval_batches(x: np.ndarray, batch: int):
-    """Yield contiguous eval slices (trailing partial batch included)."""
-    for i in range(0, len(x), batch):
-        yield x[i:i + batch]
+def padded_eval_batches(x: np.ndarray, batch: int):
+    """[N, ...] -> (batches [nb, B, ...], mask [nb, B] float32).
+
+    Shape-stable eval batching: the trailing partial batch is zero-padded
+    and masked out instead of yielded ragged, so the evaluator can jit/vmap
+    over a fixed [nb, B, ...] block (one compile per test-set shape).
+    """
+    x = np.asarray(x)
+    n = x.shape[0]
+    nb = max(1, -(-n // batch))
+    pad = nb * batch - n
+    mask = np.ones((n,), np.float32)
+    if pad:
+        x = np.concatenate([x, np.zeros((pad,) + x.shape[1:], x.dtype)])
+        mask = np.concatenate([mask, np.zeros((pad,), np.float32)])
+    return (x.reshape((nb, batch) + x.shape[1:]), mask.reshape(nb, batch))
