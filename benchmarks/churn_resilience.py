@@ -5,12 +5,19 @@ The paper's headline claim is communication efficiency on an ideal medium;
 this table asks whether FACADE's advantage (and its cluster assignment)
 survives message loss, node churn and stragglers — and converts bytes into
 "simulated hours to finish" via the netsim latency/bandwidth cost model.
+
+The grid rides ``repro.sweep.run_sweep`` over one shared ``EngineCache``:
+presets over one algorithm are separate cache entries (netsim config is a
+static key field), but every cell shares the SAME compiled evaluator
+(keyed on model config + eval split, not on the network).
 """
 from __future__ import annotations
 
 import numpy as np
 
+from repro.core.cache import EngineCache
 from repro.netsim import NetworkConfig
+from repro.sweep import SweepCell, run_sweep
 
 from . import common
 
@@ -35,27 +42,35 @@ def run(quick: bool = True) -> dict:
     algos = ("facade", "el") if quick else common.ALGOS
     rounds = min(rounds, 24) if quick else rounds
 
+    kw = {k: v for k, v in common.std_kwargs(quick).items() if k != "seed"}
+    cells = [SweepCell(name=f"{preset}/{algo}", algo=algo, cfg=cfg,
+                       dataset=ds, rounds=rounds, net=preset,
+                       kwargs=dict(kw))
+             for preset in PRESETS for algo in algos]
+    cache = EngineCache()
+    sweep = run_sweep(cells, seeds=(0,), cache=cache)
+
     rows, payload = [], {}
-    for preset in PRESETS:
-        for algo in algos:
-            res = common.run_algo(algo, cfg, ds, rounds, quick,
-                                  net=NetworkConfig.preset(preset))
-            fair = res.best_fair_acc()
-            settled = _settled_frac(res)
-            rows.append([preset, algo, f"{fair:.3f}",
-                         f"{res.comm.bytes[-1]/1e6:.1f} MB",
-                         f"{res.comm.seconds[-1]/3600:.2f} h",
-                         f"{settled:.2f}"])
-            payload[f"{preset}/{algo}"] = {
-                "best_fair_acc": fair,
-                "final_acc": res.final_acc,
-                "total_bytes": res.comm.bytes[-1],
-                "sim_seconds": res.comm.seconds[-1],
-                "settled_frac": settled,
-            }
+    for cres in sweep.cells:
+        res = cres.results[0]
+        preset, algo = cres.cell.net, cres.cell.algo
+        fair = res.best_fair_acc()
+        settled = _settled_frac(res)
+        rows.append([preset, algo, f"{fair:.3f}",
+                     f"{res.comm.bytes[-1]/1e6:.1f} MB",
+                     f"{res.comm.seconds[-1]/3600:.2f} h",
+                     f"{settled:.2f}"])
+        payload[cres.cell.name] = {
+            "best_fair_acc": fair,
+            "final_acc": res.final_acc,
+            "total_bytes": res.comm.bytes[-1],
+            "sim_seconds": res.comm.seconds[-1],
+            "settled_frac": settled,
+        }
     print(common.table(
         ["preset", "algo", "fair_acc", "traffic", "sim time", "settled"],
         rows))
+    payload["sweep_cache"] = cache.stats()
     common.save("churn_resilience", payload)
     return payload
 

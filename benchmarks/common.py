@@ -76,3 +76,20 @@ def table(headers, rows) -> str:
 def make_ds(spec, sizes, transforms=None, label_split=None):
     return make_clustered_data(spec, sizes, transforms,
                                label_split=label_split)
+
+
+def micro_config(n_nodes: int = 32, seed: int = 3):
+    """Deliberately tiny 32-node GN-LeNet setup (8x8 images, width 2) where
+    per-round compute is a few ms — the regime where driver overhead and
+    XLA compiles, not model FLOPs, bound sweep throughput. Shared by the
+    ``round_throughput`` and ``seed_sweep`` benchmarks."""
+    from repro.models.base import CNNConfig
+
+    cfg = CNNConfig(name="lenet-micro", kind="lenet", image_size=8,
+                    width=2, n_classes=4)
+    spec = SynthSpec(n_classes=4, image_size=8, samples_per_class=8,
+                     test_per_class=16, seed=seed)
+    half = n_nodes // 2
+    ds = make_clustered_data(spec, (half, n_nodes - half),
+                             ("rot0", "rot180"))
+    return cfg, ds

@@ -55,11 +55,25 @@ def run(quick: bool = True) -> dict:
         print(f"engine smoke: {eng_rec['status']} "
               f"({eng_rec['total_bytes']/1e3:.1f} KB)")
 
+    # sweep smoke: 2-seed x 2-algorithm grid on one shared EngineCache —
+    # asserts zero recompiles after the first run of each cell
+    try:
+        from . import seed_sweep
+        sweep_rec = seed_sweep.smoke()
+    except Exception as e:
+        sweep_rec = {"status": "fail", "error": repr(e)}
+        print(f"sweep smoke: FAIL ({e!r})")
+    else:
+        print(f"sweep smoke: {sweep_rec['status']} "
+              f"({sweep_rec['compiles_after_first']} compiles, "
+              f"{sweep_rec['recompiles']} recompiles after first run)")
+
     recs = [r for r in load("dryrun_*.jsonl") if r.get("tag", "") == ""]
     if not recs:
         print("no dry-run records; run `python -m repro.launch.dryrun --all` "
               "(and --multi-pod) first")
-        return {"netsim_smoke": net_rec, "engine_smoke": eng_rec}
+        return {"netsim_smoke": net_rec, "engine_smoke": eng_rec,
+                "sweep_smoke": sweep_rec}
     rows = []
     ok = fail = skip = 0
     for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
@@ -84,7 +98,8 @@ def run(quick: bool = True) -> dict:
     print(f"\n{ok} compiled, {fail} failed, {skip} skipped "
           f"(full-attention long_500k carve-outs)")
     payload = {"n_ok": ok, "n_fail": fail, "n_skip": skip, "records": recs,
-               "netsim_smoke": net_rec, "engine_smoke": eng_rec}
+               "netsim_smoke": net_rec, "engine_smoke": eng_rec,
+               "sweep_smoke": sweep_rec}
     common.save("dryrun_matrix", payload)
     return payload
 

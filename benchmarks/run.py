@@ -12,8 +12,8 @@ import time
 
 from . import (churn_resilience, color_shift, comm_cost, dryrun_matrix,
                fair_accuracy, fairness_dp_eo, k_sensitivity, kernel_bench,
-               label_skew, percluster_accuracy, round_throughput, settlement,
-               warmup_ablation)
+               label_skew, percluster_accuracy, round_throughput, seed_sweep,
+               settlement, warmup_ablation)
 
 SUITES = {
     "percluster_accuracy": percluster_accuracy,   # Fig. 3 / Tab. II
@@ -27,6 +27,7 @@ SUITES = {
     "color_shift": color_shift,                   # App. H
     "churn_resilience": churn_resilience,         # netsim presets sweep
     "round_throughput": round_throughput,         # segment engine rounds/sec
+    "seed_sweep": seed_sweep,                     # compile-cache sweep vs naive
     "kernel_bench": kernel_bench,                 # kernels (systems)
     "dryrun_matrix": dryrun_matrix,               # §Dry-run / §Roofline
 }

@@ -1,0 +1,131 @@
+"""Seed-sweep compile-cache benchmark: ``run_sweep`` (shared EngineCache)
+vs naive per-run ``run_experiment`` over the paper's multi-seed regime.
+
+The paper's tables average every (algorithm, imbalance, dataset) cell over
+seeds, and ``run_experiment`` historically rebuilt + recompiled the engine
+and evaluator per call — S seeds paid S identical XLA compiles. This
+benchmark runs 8 seeds x 2 algorithms on the 32-node micro CNN
+(eval_every=20) both ways and records wall-clock plus exact compile counts
+from the cache's counters.
+
+Acceptance: ZERO engine recompiles after the first run of each cell (the
+sweep is run as first-seed pass + remaining-seeds pass on one shared cache
+to measure exactly that) and >= 2x wall-clock over the naive driver.
+Writes ``results/bench/BENCH_sweep.json``.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.cache import EngineCache
+from repro.core.runner import run_experiment
+from repro.sweep import SweepCell, aggregate_cell, run_sweep
+
+from . import common
+
+N_NODES = 32
+EVAL_EVERY = 20
+LOCAL_STEPS = 1
+BATCH = 2
+ALGOS = ("facade", "el")
+N_SEEDS = 8
+
+
+def _cells(cfg, ds, rounds):
+    kw = dict(k=2, degree=4, local_steps=LOCAL_STEPS, batch_size=BATCH,
+              lr=0.05, eval_every=EVAL_EVERY)
+    return [SweepCell(name=algo, algo=algo, cfg=cfg, dataset=ds,
+                      rounds=rounds, kwargs=dict(kw)) for algo in ALGOS]
+
+
+def run(quick: bool = True) -> dict:
+    rounds = 20 if quick else 60
+    seeds = tuple(range(N_SEEDS))
+    cfg, ds = common.micro_config(N_NODES)
+    cells = _cells(cfg, ds, rounds)
+
+    # --- naive: a fresh cache per run — the historical per-call cost ---
+    naive_compiles = []
+    t0 = time.perf_counter()
+    for cell in cells:
+        for seed in seeds:
+            solo = EngineCache()
+            run_experiment(cell.algo, cell.cfg, cell.dataset,
+                           rounds=cell.rounds, seed=seed, cache=solo,
+                           **cell.kwargs)
+            naive_compiles.append(solo.compile_count)
+    t_naive = time.perf_counter() - t0
+
+    # --- sweep: one shared cache; split first seed / rest so the compile
+    # counter isolates "after the first run of each cell" exactly ---
+    shared = EngineCache()
+    t0 = time.perf_counter()
+    first = run_sweep(cells, seeds[:1], cache=shared)
+    compiles_first = shared.compile_count
+    rest = run_sweep(cells, seeds[1:], cache=shared)
+    t_sweep = time.perf_counter() - t0
+    recompiles = shared.compile_count - compiles_first
+
+    results = {}
+    rows = []
+    for cell, cf, cr in zip(cells, first.cells, rest.cells):
+        summary = aggregate_cell(cf.results + cr.results)
+        results[cell.name] = summary
+        rows.append([cell.name, f"{summary['best_fair_acc']['mean']:.3f}"
+                     f"±{summary['best_fair_acc']['std']:.3f}",
+                     f"{summary['total_bytes']['mean'] / 1e6:.1f} MB"])
+    print(common.table(["cell", "best_fair_acc", "traffic"], rows))
+
+    speedup = t_naive / t_sweep
+    payload = {
+        "n_nodes": N_NODES, "rounds": rounds, "eval_every": EVAL_EVERY,
+        "local_steps": LOCAL_STEPS, "batch_size": BATCH,
+        "n_seeds": N_SEEDS, "algos": list(ALGOS),
+        "naive": {"wall_s": t_naive, "compiles": sum(naive_compiles),
+                  "compiles_per_run": naive_compiles},
+        "sweep": {"wall_s": t_sweep, "compiles": shared.compile_count,
+                  "compiles_after_first_run_per_cell": compiles_first,
+                  "cache": shared.stats()},
+        "recompiles_after_first": recompiles,
+        "zero_recompiles_after_first": recompiles == 0,
+        "speedup": speedup,
+        "results": results,
+    }
+    out = common.save("BENCH_sweep", payload)
+    print(f"wrote {out} (naive {t_naive:.1f}s / sweep {t_sweep:.1f}s = "
+          f"{speedup:.2f}x, {recompiles} recompiles after first run)")
+    return payload
+
+
+def smoke() -> dict:
+    """Tiny sweep exercise for the dry-run matrix: 2 seeds x 2 algorithms
+    at 4 nodes on one shared cache; asserts zero recompiles after the
+    first run of each cell."""
+    from repro.configs.facade_paper import lenet
+    from repro.data.synthetic import SynthSpec
+
+    spec = SynthSpec(n_classes=4, image_size=16, samples_per_class=8,
+                     test_per_class=8, seed=3)
+    ds = common.make_ds(spec, (3, 1), ("rot0", "rot180"))
+    cfg = lenet(smoke=True).replace(n_classes=4)
+    kw = dict(k=2, degree=2, local_steps=2, batch_size=4, lr=0.05,
+              eval_every=2)
+    cells = [SweepCell(name=a, algo=a, cfg=cfg, dataset=ds, rounds=2,
+                       kwargs=dict(kw)) for a in ("facade", "el")]
+    cache = EngineCache()
+    first = run_sweep(cells, (0,), cache=cache)    # first run of each cell
+    compiles_first = cache.compile_count
+    rest = run_sweep(cells, (1,), cache=cache)     # must all run warm
+    recompiles = cache.compile_count - compiles_first
+    summaries = [aggregate_cell(f.results + r.results)
+                 for f, r in zip(first.cells, rest.cells)]
+    ok = (recompiles == 0
+          and all(s["n_seeds"] == 2 for s in summaries))
+    return {"status": "ok" if ok else "fail",
+            "compiles_after_first": compiles_first,
+            "recompiles": recompiles,
+            "entries": len(cache)}
+
+
+if __name__ == "__main__":
+    run()

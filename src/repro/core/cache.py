@@ -1,0 +1,188 @@
+"""Cross-run compile cache: the seed-independent machinery behind a sweep.
+
+``run_experiment`` historically rebuilt everything per call — the model
+binding, the algorithm round closures, the scan engine's jitted segment
+programs and the jitted evaluator — so a sweep of S seeds over ONE config
+paid S identical XLA compiles. At paper scale (5 algorithms x netsim
+presets x cluster-imbalance grids x many seeds, tiny per-round compute)
+those compiles dominate wall-clock.
+
+:class:`EngineCache` memoizes on a static :class:`EngineSpec` key:
+
+* the :class:`~repro.core.bindings.Binding` and the algorithm *program*
+  (round/warmup closures, ``models_of``, ``finalize`` — everything
+  ``runner.algo_setup`` builds except the seed-dependent initial state);
+* one :class:`~repro.core.engine.SegmentEngine` per entry, whose compiled
+  segment programs (keyed per ``(length, warmup)`` inside the engine) are
+  therefore shared by every run of the cell;
+* evaluators, cached cache-wide on ``(model cfg, eval batch, content
+  fingerprint of the eval split)`` — independent of algorithm and netsim
+  preset, so a grid of presets over one dataset compiles ONE evaluator.
+
+Cache-key contract: every knob that changes a compiled program or the
+round/eval arithmetic MUST be a field of :class:`EngineSpec`; only the
+experiment seed (PRNG) and the data may vary within an entry. A changed
+eval split changes the fingerprint, never silently reuses a stale
+evaluator; train data is passed per call and never cached. ``rounds`` and
+``eval_every`` are deliberately NOT key fields — segment programs are
+keyed per ``(length, warmup)`` inside the engine, so different eval
+schedules share an entry safely.
+
+Donation caveat: segment programs donate their input :class:`EngineCarry`
+buffers. Reusing a cached engine across runs is safe precisely because
+each run builds a FRESH carry from its own seed; never feed a consumed
+carry back into ``run_segment``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import weakref
+from typing import Any
+
+import numpy as np
+
+from .bindings import make_binding
+from .engine import SegmentEngine
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineSpec:
+    """Static cache key for one sweep cell.
+
+    All fields are hashable statics: ``cfg`` is a frozen model config
+    dataclass and ``net`` a frozen :class:`repro.netsim.NetworkConfig`
+    (or ``None``). Two specs compare equal iff every compiled program and
+    every round closure they imply is interchangeable.
+    """
+    algo: str                    # facade | el | dpsgd | deprl | dac
+    cfg: Any                     # CNNConfig / ModelConfig (frozen)
+    n: int                       # number of nodes
+    k: int                       # number of clusters / FACADE heads
+    degree: int
+    local_steps: int
+    batch_size: int
+    lr: float
+    warmup_rounds: int = 0
+    head_jitter: float = 0.0
+    net: Any = None              # NetworkConfig | None
+    eval_batch: int = 256        # make_evaluator batch size
+
+
+_FP_MEMO: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def data_fingerprint(dataset) -> str:
+    """Content hash of everything an evaluator closes over: the node ->
+    cluster map and the per-cluster eval split (shapes, dtypes, bytes).
+
+    Memoized per dataset OBJECT (weakly, so the memo never pins data):
+    sweeps look the same dataset up once per run, and re-hashing the eval
+    split every time would be pure overhead. The flip side: mutating a
+    dataset's eval arrays IN PLACE after first use is not detected —
+    build a new dataset instead (the synthetic pipeline always does).
+    """
+    try:
+        return _FP_MEMO[dataset]
+    except (KeyError, TypeError):   # TypeError: non-weakrefable dataset
+        pass
+    h = hashlib.sha1()
+
+    def feed(a):
+        a = np.ascontiguousarray(np.asarray(a))
+        h.update(f"{a.dtype}{a.shape}".encode())
+        h.update(a.tobytes())
+
+    feed(dataset.node_cluster)
+    for x, y in zip(dataset.test_x, dataset.test_y):
+        feed(x)
+        feed(y)
+    fp = h.hexdigest()
+    try:
+        _FP_MEMO[dataset] = fp
+    except TypeError:
+        pass
+    return fp
+
+
+class CacheEntry:
+    """Seed-independent machinery for one :class:`EngineSpec`: binding,
+    algorithm program and segment engine. ``setup(key)`` mints a fresh
+    per-seed :class:`~repro.core.runner.AlgoSetup` over the shared
+    closures — state is the ONLY per-seed piece."""
+
+    def __init__(self, spec: EngineSpec):
+        from . import runner     # runner imports this module; bind lazily
+        self.spec = spec
+        self.binding = make_binding(spec.cfg)
+        self.program = runner.algo_program(
+            spec.algo, self.binding, spec.n, spec.k, degree=spec.degree,
+            local_steps=spec.local_steps, lr=spec.lr,
+            warmup_rounds=spec.warmup_rounds, head_jitter=spec.head_jitter)
+        self.engine = SegmentEngine(
+            self.program.round_fn, warmup_fn=self.program.warmup_fn,
+            net=spec.net, n=spec.n, local_steps=spec.local_steps,
+            batch_size=spec.batch_size,
+            track_cluster=self.program.track_cluster)
+
+    def setup(self, key):
+        return self.program.setup(key)
+
+    @property
+    def compile_count(self) -> int:
+        return self.engine.compile_count
+
+
+class EngineCache:
+    """Config-keyed store of :class:`CacheEntry` + evaluators.
+
+    ``entry(spec)`` returns the cell's entry, building it on first use;
+    ``evaluator(binding, dataset, batch)`` returns the (cfg, batch,
+    data-fingerprint)-keyed evaluator. ``compile_count`` totals every
+    compiled program the cache owns — segment builds plus evaluator
+    builds — which is what sweep smokes assert stays flat after each
+    cell's first run.
+    """
+
+    def __init__(self):
+        self._entries: dict[EngineSpec, CacheEntry] = {}
+        self._evaluators: dict[tuple, Any] = {}
+        self.hits = 0            # entry() served from cache
+        self.misses = 0          # entry() had to build
+        self.evaluator_builds = 0
+
+    def entry(self, spec: EngineSpec) -> CacheEntry:
+        e = self._entries.get(spec)
+        if e is None:
+            self.misses += 1
+            e = self._entries[spec] = CacheEntry(spec)
+        else:
+            self.hits += 1
+        return e
+
+    def evaluator(self, binding, dataset, batch: int = 256):
+        key = (binding.cfg, batch, data_fingerprint(dataset))
+        ev = self._evaluators.get(key)
+        if ev is None:
+            from . import runner
+            ev = self._evaluators[key] = runner.make_evaluator(
+                binding, dataset.node_cluster, dataset.test_x,
+                dataset.test_y, batch=batch)
+            self.evaluator_builds += 1
+        return ev
+
+    @property
+    def compile_count(self) -> int:
+        return (sum(e.compile_count for e in self._entries.values())
+                + self.evaluator_builds)
+
+    def stats(self) -> dict:
+        return {"entries": len(self._entries), "hits": self.hits,
+                "misses": self.misses, "compiles": self.compile_count,
+                "evaluator_builds": self.evaluator_builds}
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, spec) -> bool:
+        return spec in self._entries

@@ -90,6 +90,13 @@ class SegmentEngine:
         self._b = batch_size
         self._track = track_cluster
         self._compiled: dict[tuple[int, bool], Callable] = {}
+        # compile_count tracks XLA compiles, not just fresh (length, warmup)
+        # builds: a cached jitted segment RETRACES when the train arrays
+        # change shape/dtype (the only traced args whose shapes aren't
+        # pinned by the engine's config), so the counter is keyed on those
+        # too — sweep drivers assert it plateaus once a cell is warm.
+        self._traced: set[tuple] = set()
+        self.compile_count = 0
 
     # -- one segment = one jitted scan --------------------------------------
     def _build(self, length: int, warmup: bool) -> Callable:
@@ -128,6 +135,11 @@ class SegmentEngine:
         fn = self._compiled.get(key)
         if fn is None:
             fn = self._compiled[key] = self._build(length, warmup)
+        trace_key = key + tuple((a.shape, str(a.dtype))
+                                for a in (train_x, train_y))
+        if trace_key not in self._traced:
+            self._traced.add(trace_key)
+            self.compile_count += 1
         carry, outs = fn(carry, jnp.asarray(start, jnp.int32),
                          train_x, train_y)
         return carry, jax.device_get(outs)

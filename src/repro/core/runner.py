@@ -11,6 +11,13 @@ Two interchangeable drivers share all setup and evaluation code:
   reference and the baseline for ``benchmarks/round_throughput.py``.
 
 Both produce bit-identical trajectories for the same seed.
+
+All seed-independent machinery (bindings, round closures, compiled segment
+programs, evaluators) is resolved through a
+:class:`repro.core.cache.EngineCache`; pass ``cache=`` to share compiles
+across calls — that is how ``repro.sweep.run_sweep`` makes many-seed grids
+pay XLA compilation once per cell. The default (``cache=None``) builds a
+private fresh cache, i.e. exactly the historical per-call behavior.
 """
 from __future__ import annotations
 
@@ -33,8 +40,9 @@ from . import netwire
 from .baselines import (DACConfig, DeprlConfig, DpsgdConfig, ELConfig,
                         dac_round, deprl_round, dpsgd_round, el_round,
                         init_dac_extra)
-from .bindings import Binding, make_binding
-from .engine import SegmentEngine, segment_plan
+from .bindings import Binding
+from .cache import EngineCache, EngineSpec
+from .engine import segment_plan
 from .state import EngineCarry, init_baseline_state, init_facade_state
 
 
@@ -65,18 +73,33 @@ class AlgoSetup(NamedTuple):
     track_cluster: bool        # info carries a per-round cluster_id [n]
 
 
-def algo_setup(algo: str, binding: Binding, key, n: int, k: int, *,
-               degree: int, local_steps: int, lr: float,
-               warmup_rounds: int = 0,
-               head_jitter: float = 0.0) -> AlgoSetup:
+class AlgoProgram(NamedTuple):
+    """The seed-INDEPENDENT part of an algorithm: round closures and state
+    constructor. ``EngineCache`` memoizes programs per static config, so a
+    sweep builds one and mints per-seed setups via :meth:`setup`."""
+    init_state: Callable       # PRNG key -> initial stacked state
+    round_fn: Callable
+    warmup_fn: Callable
+    models_of: Callable
+    finalize: Callable
+    track_cluster: bool
+
+    def setup(self, key) -> AlgoSetup:
+        return AlgoSetup(self.init_state(key), self.round_fn, self.warmup_fn,
+                         self.models_of, self.finalize, self.track_cluster)
+
+
+def algo_program(algo: str, binding: Binding, n: int, k: int, *,
+                 degree: int, local_steps: int, lr: float,
+                 warmup_rounds: int = 0,
+                 head_jitter: float = 0.0) -> AlgoProgram:
     if algo == "facade":
         fcfg = facade_mod.FacadeConfig(
             n_nodes=n, k=k, degree=degree, local_steps=local_steps, lr=lr,
             warmup_rounds=warmup_rounds, head_jitter=head_jitter)
-        state = init_facade_state(binding, key, n, k,
-                                  head_jitter=head_jitter)
-        return AlgoSetup(
-            state=state,
+        return AlgoProgram(
+            init_state=lambda key: init_facade_state(
+                binding, key, n, k, head_jitter=head_jitter),
             round_fn=functools.partial(facade_mod.facade_round, fcfg,
                                        binding, warmup=False),
             warmup_fn=functools.partial(facade_mod.facade_round, fcfg,
@@ -89,15 +112,27 @@ def algo_setup(algo: str, binding: Binding, key, n: int, k: int, *,
                    "deprl": DeprlConfig, "dac": DACConfig}[algo]
         acfg = cfg_cls(n_nodes=n, degree=degree, local_steps=local_steps,
                        lr=lr)
-        extra = init_dac_extra(n) if algo == "dac" else None
-        state = init_baseline_state(binding, key, n, extra=extra)
         round_fn = {"el": el_round, "dpsgd": dpsgd_round,
                     "deprl": deprl_round, "dac": dac_round}[algo]
         fn = functools.partial(round_fn, acfg, binding)
-        return AlgoSetup(state=state, round_fn=fn, warmup_fn=fn,
-                         models_of=lambda s: s.params,
-                         finalize=lambda s: s, track_cluster=False)
+        return AlgoProgram(
+            init_state=lambda key: init_baseline_state(
+                binding, key, n,
+                extra=init_dac_extra(n) if algo == "dac" else None),
+            round_fn=fn, warmup_fn=fn,
+            models_of=lambda s: s.params,
+            finalize=lambda s: s, track_cluster=False)
     raise ValueError(f"unknown algorithm {algo!r}")
+
+
+def algo_setup(algo: str, binding: Binding, key, n: int, k: int, *,
+               degree: int, local_steps: int, lr: float,
+               warmup_rounds: int = 0,
+               head_jitter: float = 0.0) -> AlgoSetup:
+    return algo_program(algo, binding, n, k, degree=degree,
+                        local_steps=local_steps, lr=lr,
+                        warmup_rounds=warmup_rounds,
+                        head_jitter=head_jitter).setup(key)
 
 
 # --------------------------------------------------------------------------
@@ -203,6 +238,8 @@ def run_experiment(algo: str, cfg, dataset, *, rounds: int, k: int | None = None
                    target_acc: float | None = None,
                    net: "netsim.NetworkConfig | None" = None,
                    engine: bool = True,
+                   cache: EngineCache | None = None,
+                   eval_batch: int = 256,
                    verbose: bool = False) -> RunResult:
     """Run one (algorithm, dataset) experiment end to end (CNN models).
 
@@ -215,8 +252,22 @@ def run_experiment(algo: str, cfg, dataset, *, rounds: int, k: int | None = None
     ``engine``: ``True`` compiles whole eval-to-eval spans into one XLA
     dispatch (scan-fused segment engine, the fast path); ``False`` runs the
     legacy per-round loop. Same seed => bit-identical trajectories.
+
+    ``cache``: optional :class:`repro.core.cache.EngineCache` shared across
+    calls — a sweep of seeds over one config then pays the XLA compiles
+    once (see :mod:`repro.sweep`). ``None`` (the default) uses a fresh
+    private cache, which is bit-identical to the historical
+    build-everything-per-call behavior.
     """
-    binding = make_binding(cfg)
+    if target_acc is not None and eval_every > rounds:
+        raise ValueError(
+            f"target_acc={target_acc} can never trigger an early exit with "
+            f"eval_every={eval_every} > rounds={rounds}: no eval is "
+            "scheduled before the run's final round. Lower eval_every (or "
+            "raise rounds, or drop target_acc).")
+    if algo != "facade":
+        warmup_rounds = 0   # only FACADE has a warmup phase; normalizing
+                            # here keeps baseline cache keys from forking
     n = dataset.n_nodes
     k = k if k is not None else dataset.k
     key = jax.random.PRNGKey(seed)
@@ -225,29 +276,36 @@ def run_experiment(algo: str, cfg, dataset, *, rounds: int, k: int | None = None
     train_x = jnp.asarray(dataset.train_x)
     train_y = jnp.asarray(dataset.train_y)
 
-    setup = algo_setup(algo, binding, k_init, n, k, degree=degree,
-                       local_steps=local_steps, lr=lr,
-                       warmup_rounds=warmup_rounds, head_jitter=head_jitter)
-    evaluator = make_evaluator(binding, dataset.node_cluster,
-                               dataset.test_x, dataset.test_y)
+    cache = cache if cache is not None else EngineCache()
+    spec = EngineSpec(
+        algo=algo, cfg=cfg, n=n, k=k, degree=degree,
+        local_steps=local_steps, batch_size=batch_size, lr=lr,
+        warmup_rounds=warmup_rounds, head_jitter=head_jitter, net=net,
+        eval_batch=eval_batch)
+    entry = cache.entry(spec)
+    setup = entry.setup(k_init)
+    evaluator = cache.evaluator(entry.binding, dataset,
+                                batch=spec.eval_batch)
     hist = _History(dataset.node_cluster, n, evaluator, setup.models_of,
-                    target_acc, verbose, algo, binding.cfg.n_classes)
-    driver = _drive_engine if engine else _drive_legacy
-    driver(setup, hist, k_data, train_x, train_y, rounds=rounds,
-           eval_every=eval_every,
-           warmup_rounds=warmup_rounds if algo == "facade" else 0,
-           local_steps=local_steps, batch_size=batch_size, net=net, n=n)
+                    target_acc, verbose, algo, entry.binding.cfg.n_classes)
+    if engine:
+        _drive_engine(entry.engine, setup, hist, k_data, train_x, train_y,
+                      rounds=rounds, eval_every=eval_every,
+                      warmup_rounds=warmup_rounds)
+    else:
+        _drive_legacy(setup, hist, k_data, train_x, train_y, rounds=rounds,
+                      eval_every=eval_every, warmup_rounds=warmup_rounds,
+                      local_steps=local_steps, batch_size=batch_size,
+                      net=net, n=n)
     return hist.result(algo)
 
 
 # --------------------------------------------------------------------------
-def _drive_engine(setup: AlgoSetup, hist: _History, k_data, train_x, train_y,
-                  *, rounds, eval_every, warmup_rounds, local_steps,
-                  batch_size, net, n):
-    """Segment-engine driver: one dispatch + one host transfer per span."""
-    eng = SegmentEngine(setup.round_fn, warmup_fn=setup.warmup_fn, net=net,
-                        n=n, local_steps=local_steps, batch_size=batch_size,
-                        track_cluster=setup.track_cluster)
+def _drive_engine(eng, setup: AlgoSetup, hist: _History, k_data,
+                  train_x, train_y, *, rounds, eval_every, warmup_rounds):
+    """Segment-engine driver: one dispatch + one host transfer per span.
+    ``eng`` comes from the run's :class:`EngineCache` entry, so repeated
+    runs of one config reuse its compiled segment programs."""
     carry = EngineCarry(setup.state, k_data)
     for seg in segment_plan(rounds, eval_every, warmup_rounds):
         carry, outs = eng.run_segment(carry, seg.start, seg.length,

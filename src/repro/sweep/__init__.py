@@ -1,0 +1,34 @@
+"""repro.sweep — cross-run compile-cache sweeps.
+
+The paper's headline numbers are all multi-seed grids: accuracy, fairness
+and bytes-to-target per (algorithm, cluster-imbalance, dataset) cell,
+averaged over seeds. A naive sweep calls ``run_experiment`` per run and
+pays identical XLA compiles S times per cell; this subsystem reuses the
+seed-independent machinery instead:
+
+* :class:`repro.core.cache.EngineCache` / :class:`EngineSpec` — the
+  config-keyed compile cache (algorithm programs, segment engines,
+  evaluators);
+* :func:`run_sweep` / :class:`SweepCell` — the grid driver: every cell
+  compiles once, every further seed runs warm, bit-identical to fresh
+  ``run_experiment`` calls;
+* :func:`aggregate_cell` — per-cell mean/std trajectories, fairness
+  metrics and bytes/seconds-to-target tables, JSON-ready.
+
+Usage::
+
+    from repro.sweep import SweepCell, run_sweep
+
+    cells = [SweepCell(name=f"{a}/{p}", algo=a, cfg=cfg, dataset=ds,
+                       rounds=400, net=p,
+                       kwargs=dict(eval_every=40, local_steps=10))
+             for a in ("facade", "el") for p in (None, "edge-churn")]
+    sweep = run_sweep(cells, seeds=range(8), targets=(0.7,),
+                      json_path="results/sweep.json")
+    sweep.cell("facade/edge-churn").summary["best_fair_acc"]
+"""
+from repro.core.cache import (EngineCache, EngineSpec,  # noqa: F401
+                              data_fingerprint)
+from .aggregate import aggregate_cell  # noqa: F401
+from .driver import (CellResult, SweepCell, SweepResult,  # noqa: F401
+                     run_sweep)

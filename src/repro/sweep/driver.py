@@ -1,0 +1,137 @@
+"""Sweep driver: fan (algorithm x netsim preset x config) cells over seeds
+on one shared compile cache.
+
+Each :class:`SweepCell` is one grid cell — everything static; only the
+experiment seed varies inside it. ``run_sweep`` routes every run through
+:func:`repro.core.runner.run_experiment` with a shared
+:class:`repro.core.cache.EngineCache`, so a cell pays its XLA compiles on
+the first seed and every further seed runs warm; cells that coincide on
+the static key (e.g. the same algorithm under two eval schedules) share
+programs too, and all cells over one dataset+model share the evaluator.
+Warm-cache runs are bit-identical to fresh ``run_experiment`` calls
+(``tests/test_sweep.py`` pins this for all five algorithms, with and
+without netsim).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import time
+from typing import Any, Sequence
+
+from repro.core.cache import EngineCache
+from repro.core.runner import run_experiment
+from repro.netsim import NetworkConfig
+
+from .aggregate import aggregate_cell
+
+
+@dataclasses.dataclass
+class SweepCell:
+    """One grid cell. ``net`` may be a :class:`NetworkConfig`, a preset
+    name (``"edge-churn"``), or ``None``; ``kwargs`` are passed through to
+    ``run_experiment`` (``degree``, ``local_steps``, ``batch_size``,
+    ``lr``, ``eval_every``, ``warmup_rounds``, ``target_acc``, ...) —
+    everything except ``seed``, which ``run_sweep`` owns."""
+    name: str
+    algo: str
+    cfg: Any
+    dataset: Any
+    rounds: int
+    net: Any = None
+    kwargs: dict = dataclasses.field(default_factory=dict)
+
+    def resolved_net(self):
+        return (NetworkConfig.preset(self.net) if isinstance(self.net, str)
+                else self.net)
+
+
+@dataclasses.dataclass
+class CellResult:
+    cell: SweepCell
+    seeds: tuple
+    results: list          # per-seed RunResult, in ``seeds`` order
+    summary: dict          # aggregate_cell(results, targets)
+
+
+@dataclasses.dataclass
+class SweepResult:
+    cells: list
+    seeds: tuple
+    cache: EngineCache
+    wall_s: float
+
+    def cell(self, name: str) -> CellResult:
+        for c in self.cells:
+            if c.cell.name == name:
+                return c
+        raise KeyError(f"no sweep cell named {name!r}; "
+                       f"know {[c.cell.name for c in self.cells]}")
+
+    def to_json(self) -> dict:
+        cells = {}
+        for c in self.cells:
+            net = c.cell.net
+            cells[c.cell.name] = {
+                "algo": c.cell.algo,
+                "net": (net if isinstance(net, str) or net is None
+                        else net.name),
+                "rounds": c.cell.rounds,
+                "kwargs": {k: repr(v) if not isinstance(
+                    v, (int, float, str, bool, type(None))) else v
+                    for k, v in c.cell.kwargs.items()},
+                "summary": c.summary,
+            }
+        return {"seeds": list(self.seeds), "wall_s": self.wall_s,
+                "cache": self.cache.stats(), "cells": cells}
+
+    def save(self, path) -> pathlib.Path:
+        path = pathlib.Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(self.to_json(), indent=2, default=float))
+        return path
+
+
+def run_sweep(cells: Sequence[SweepCell], seeds: Sequence[int], *,
+              cache: EngineCache | None = None, targets: Sequence[float] = (),
+              json_path=None, verbose: bool = False) -> SweepResult:
+    """Run every cell over every seed, reusing compiled programs.
+
+    ``cache``: share one :class:`EngineCache` across calls to keep programs
+    warm between sweeps (``None`` builds a fresh one for this sweep).
+    ``targets``: accuracies for the per-cell bytes/seconds-to-target table.
+    ``json_path``: if set, the aggregated sweep is written there as JSON.
+    """
+    cache = cache if cache is not None else EngineCache()
+    seeds = tuple(int(s) for s in seeds)
+    names = [c.name for c in cells]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate sweep cell names: {names}")
+    for cell in cells:
+        if "seed" in cell.kwargs:
+            raise ValueError(
+                f"cell {cell.name!r} sets 'seed' in kwargs; seeds are the "
+                "sweep axis — pass them to run_sweep instead")
+
+    t0 = time.perf_counter()
+    out = []
+    for cell in cells:
+        net = cell.resolved_net()
+        results = []
+        for seed in seeds:
+            results.append(run_experiment(
+                cell.algo, cell.cfg, cell.dataset, rounds=cell.rounds,
+                seed=seed, net=net, cache=cache, **cell.kwargs))
+        summary = aggregate_cell(results, targets=targets)
+        out.append(CellResult(cell, seeds, results, summary))
+        if verbose:
+            fa = summary["best_fair_acc"]
+            print(f"  [sweep] {cell.name}: best_fair_acc="
+                  f"{fa['mean']:.3f}±{fa['std']:.3f} over "
+                  f"{len(seeds)} seeds ({cache.stats()['compiles']} "
+                  "compiles so far)")
+    sweep = SweepResult(out, seeds, cache, time.perf_counter() - t0)
+    if json_path is not None:
+        sweep.save(json_path)
+    return sweep

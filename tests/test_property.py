@@ -1,4 +1,6 @@
 """Property-based tests (hypothesis) of system invariants."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,8 +10,12 @@ pytest.importorskip("hypothesis", reason="hypothesis not installed")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import split, topology
+from repro.core.cache import EngineSpec
+from repro.core.engine import segment_plan
 from repro.fairness.metrics import (demographic_parity, equalized_odds,
                                     fair_accuracy)
+from repro.models.base import CNNConfig
+from repro.netsim import NetworkConfig
 from repro.models import transformer
 from repro.models.attention import chunked_sdpa, sdpa
 from repro.roofline.analysis import (collective_bytes_from_hlo,
@@ -118,6 +124,98 @@ def test_chunked_ce_matches_plain(b, s, chunk, seed):
     gold = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
     want = ((lse - gold) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
     np.testing.assert_allclose(float(loss), float(want), rtol=1e-5)
+
+
+# --------------------------------------------------------------------------
+@_settings
+@given(rounds=st.integers(0, 64), eval_every=st.integers(1, 70),
+       warmup=st.integers(0, 70))
+def test_segment_plan_properties(rounds, eval_every, warmup):
+    """Invariants the scan engine's correctness rests on: every round is
+    covered exactly once and in order; the plan cuts at every eval round
+    and at the warmup boundary; the ``warmup`` flag is static per segment
+    (no segment straddles the phase switch); ``eval_at_end`` marks exactly
+    the legacy driver's eval schedule."""
+    plan = segment_plan(rounds, eval_every, warmup_rounds=warmup)
+    covered = [r for s in plan for r in range(s.start, s.start + s.length)]
+    assert covered == list(range(rounds))          # exact, ordered coverage
+    assert all(s.length >= 1 for s in plan)
+
+    evals = set(range(eval_every, rounds + 1, eval_every))
+    if rounds > 0:
+        evals.add(rounds)                          # the final round evals
+    ends = {s.start + s.length: s.eval_at_end for s in plan}
+    for r in evals:
+        assert ends.get(r) is True                 # cut + eval at each eval
+    for end, evaled in ends.items():
+        assert evaled == (end in evals)            # never a spurious eval
+
+    for s in plan:
+        assert s.warmup == (s.start < warmup)      # flag static per segment
+        assert not (s.start < warmup < s.start + s.length)
+
+
+_SPEC_FIELDS = st.fixed_dictionaries(dict(
+    algo=st.sampled_from(["facade", "el", "dpsgd", "deprl", "dac"]),
+    width=st.integers(2, 8),
+    n=st.integers(2, 64),
+    k=st.integers(1, 4),
+    degree=st.integers(1, 6),
+    local_steps=st.integers(1, 10),
+    batch_size=st.integers(1, 16),
+    lr=st.sampled_from([0.01, 0.05, 0.1]),
+    warmup_rounds=st.integers(0, 20),
+    head_jitter=st.sampled_from([0.0, 0.1]),
+    preset=st.sampled_from([None, "lan", "wan", "edge-churn"]),
+    eval_batch=st.sampled_from([64, 256]),
+))
+
+_PERTURB = {
+    "algo": lambda v: "el" if v != "el" else "dac",
+    "cfg": lambda v: v.replace(width=v.width + 1),
+    "n": lambda v: v + 1,
+    "k": lambda v: v + 1,
+    "degree": lambda v: v + 1,
+    "local_steps": lambda v: v + 1,
+    "batch_size": lambda v: v + 1,
+    "lr": lambda v: v + 0.001,
+    "warmup_rounds": lambda v: v + 1,
+    "head_jitter": lambda v: v + 0.5,
+    "net": lambda v: (NetworkConfig.preset("hostile") if v is None
+                      else None),
+    "eval_batch": lambda v: v + 1,
+}
+
+
+def _spec_from(fields) -> EngineSpec:
+    cfg = CNNConfig(name="lenet-prop", kind="lenet", image_size=8,
+                    width=fields["width"], n_classes=4)
+    net = (NetworkConfig.preset(fields["preset"])
+           if fields["preset"] else None)
+    return EngineSpec(algo=fields["algo"], cfg=cfg, n=fields["n"],
+                      k=fields["k"], degree=fields["degree"],
+                      local_steps=fields["local_steps"],
+                      batch_size=fields["batch_size"], lr=fields["lr"],
+                      warmup_rounds=fields["warmup_rounds"],
+                      head_jitter=fields["head_jitter"], net=net,
+                      eval_batch=fields["eval_batch"])
+
+
+@_settings
+@given(fields=_SPEC_FIELDS, perturb=st.sampled_from(sorted(_PERTURB)))
+def test_engine_cache_key_properties(fields, perturb):
+    """Equal configs -> the same key (and hash); perturbing ANY single
+    static field -> a different key. A collision here would silently hand
+    a sweep the wrong compiled programs."""
+    a, b = _spec_from(fields), _spec_from(fields)
+    assert a == b and hash(a) == hash(b)
+
+    mutated = dataclasses.replace(
+        a, **{perturb: _PERTURB[perturb](getattr(a, perturb))})
+    assert mutated != a
+    # the perturbed spec round-trips through dict lookup as its own key
+    table = {a: "a", mutated: "m"}
+    assert table[a] == "a" and table[mutated] == "m"
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,239 @@
+"""repro.sweep + EngineCache: warm-cache sweep runs are bit-identical to
+fresh ``run_experiment(engine=True)`` calls (all 5 algorithms, with and
+without netsim, including donated-carry reuse across runs); cache keys
+never collide across configs; cross-seed aggregation; and the
+``target_acc``/``eval_every`` validation regression."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.facade_paper import lenet
+from repro.core.cache import EngineCache, EngineSpec, data_fingerprint
+from repro.core.runner import run_experiment
+from repro.data.synthetic import SynthSpec, make_clustered_data
+from repro.netsim import NetworkConfig
+from repro.sweep import SweepCell, aggregate_cell, run_sweep
+
+CFG = lenet(smoke=True).replace(n_classes=4)
+ALGOS = ("facade", "el", "dpsgd", "deprl", "dac")
+SEEDS = (0, 1, 2)
+KW = dict(k=2, degree=2, local_steps=2, batch_size=4, lr=0.05, eval_every=2)
+
+
+@pytest.fixture(scope="module")
+def tiny_ds():
+    spec = SynthSpec(n_classes=4, image_size=16, samples_per_class=8,
+                     test_per_class=8, seed=3)
+    return make_clustered_data(spec, cluster_sizes=(3, 1),
+                               transforms=("rot0", "rot180"))
+
+
+def _cell(algo, ds, net=None, rounds=4, **overrides):
+    kw = dict(KW)
+    kw.update(overrides)
+    return SweepCell(name=algo, algo=algo, cfg=CFG, dataset=ds,
+                     rounds=rounds, net=net, kwargs=kw)
+
+
+def _assert_runs_identical(ref, got):
+    assert ref.acc_per_cluster == got.acc_per_cluster
+    assert ref.fair_acc == got.fair_acc
+    assert ref.dp == got.dp and ref.eo == got.eo
+    assert ref.final_acc == got.final_acc
+    assert ref.comm.rounds == got.comm.rounds
+    assert ref.comm.bytes == got.comm.bytes          # exact float equality
+    assert ref.comm.seconds == got.comm.seconds
+    assert ref.comm.evaled == got.comm.evaled
+    assert len(ref.cluster_history) == len(got.cluster_history)
+    for (r1, c1), (r2, c2) in zip(ref.cluster_history, got.cluster_history):
+        assert r1 == r2
+        np.testing.assert_array_equal(c1, c2)
+
+
+# ----------------------------------------------------- cache-hit parity ----
+@pytest.mark.parametrize("netname", [None, "edge-churn"],
+                         ids=["ideal", "edge-churn"])
+@pytest.mark.parametrize("algo", ALGOS)
+def test_sweep_parity_bitforbit(algo, netname, tiny_ds):
+    """A 3-seed warm-cache sweep cell (seeds 1 and 2 reuse seed 0's
+    compiled, donated-carry segment programs) must equal three fresh
+    ``run_experiment(engine=True)`` calls bit for bit — trajectories,
+    stop rounds, and full CommLog contents."""
+    cache = EngineCache()
+    sweep = run_sweep([_cell(algo, tiny_ds, net=netname)], SEEDS,
+                      cache=cache)
+    assert cache.misses == 1                     # one entry for the cell
+    assert cache.hits == len(SEEDS) - 1          # warm for seeds 1, 2
+    net = NetworkConfig.preset(netname) if netname else None
+    for seed, got in zip(SEEDS, sweep.cells[0].results):
+        ref = run_experiment(algo, CFG, tiny_ds, rounds=4, seed=seed,
+                             net=net, engine=True, **KW)
+        _assert_runs_identical(ref, got)
+
+
+def test_sweep_warmup_boundary_parity(tiny_ds):
+    """FACADE's two-variant warmup/main compile split survives caching."""
+    cache = EngineCache()
+    cell = _cell("facade", tiny_ds, rounds=6, eval_every=4, warmup_rounds=3)
+    sweep = run_sweep([cell], SEEDS, cache=cache)
+    for seed, got in zip(SEEDS, sweep.cells[0].results):
+        ref = run_experiment("facade", CFG, tiny_ds, rounds=6, seed=seed,
+                             warmup_rounds=3,
+                             **{**KW, "eval_every": 4})
+        _assert_runs_identical(ref, got)
+
+
+def test_sweep_target_acc_stop_parity(tiny_ds):
+    """target_acc early exit fires at the same eval round warm as fresh."""
+    cache = EngineCache()
+    cell = _cell("el", tiny_ds, rounds=8, target_acc=0.0)
+    sweep = run_sweep([cell], SEEDS, cache=cache)
+    for seed, got in zip(SEEDS, sweep.cells[0].results):
+        ref = run_experiment("el", CFG, tiny_ds, rounds=8, seed=seed,
+                             target_acc=0.0, **KW)
+        _assert_runs_identical(ref, got)
+        assert got.comm.rounds[-1] == 2          # stopped at the first eval
+
+
+def test_sweep_zero_recompiles_after_first_run(tiny_ds):
+    cache = EngineCache()
+    cells = [_cell("el", tiny_ds), _cell("dac", tiny_ds)]
+    run_sweep(cells, SEEDS[:1], cache=cache)     # first run of each cell
+    compiled = cache.compile_count
+    assert compiled > 0
+    run_sweep(cells, SEEDS, cache=cache)
+    assert cache.compile_count == compiled
+
+
+# ------------------------------------------------- cache-key collisions ----
+def test_cache_key_no_collision_on_local_steps_or_preset(tiny_ds):
+    """Two configs differing ONLY in local_steps (or only in netsim
+    preset) must not share entries — a collision would silently train
+    with the wrong compiled program."""
+    base = EngineSpec(algo="el", cfg=CFG, n=4, k=2, degree=2,
+                      local_steps=2, batch_size=4, lr=0.05)
+    cache = EngineCache()
+    e_base = cache.entry(base)
+    e_steps = cache.entry(dataclasses.replace(base, local_steps=3))
+    e_net = cache.entry(
+        dataclasses.replace(base, net=NetworkConfig.preset("edge-churn")))
+    assert cache.misses == 3 and cache.hits == 0
+    assert e_base is not e_steps and e_base is not e_net
+    assert len({id(e_base.engine), id(e_steps.engine),
+                id(e_net.engine)}) == 3
+    # and the run-level path sees the same distinction
+    cache2 = EngineCache()
+    run_experiment("el", CFG, tiny_ds, rounds=2, cache=cache2, **KW)
+    run_experiment("el", CFG, tiny_ds, rounds=2, cache=cache2,
+                   **{**KW, "local_steps": 3})
+    run_experiment("el", CFG, tiny_ds, rounds=2, cache=cache2, **KW)
+    assert cache2.misses == 2 and cache2.hits == 1
+
+
+def test_cache_key_equal_configs_share_entry():
+    cache = EngineCache()
+    a = EngineSpec(algo="facade", cfg=CFG, n=4, k=2, degree=2,
+                   local_steps=2, batch_size=4, lr=0.05,
+                   net=NetworkConfig.preset("wan"))
+    b = EngineSpec(algo="facade", cfg=CFG, n=4, k=2, degree=2,
+                   local_steps=2, batch_size=4, lr=0.05,
+                   net=NetworkConfig.preset("wan"))
+    assert a == b and hash(a) == hash(b)
+    assert cache.entry(a) is cache.entry(b)
+    assert cache.stats()["entries"] == 1
+
+
+def test_evaluator_cache_keyed_on_data_content(tiny_ds):
+    """Same shapes, different eval content => different fingerprint, so a
+    changed dataset can never reuse a stale evaluator."""
+    spec = dataclasses.replace(tiny_ds.spec, seed=tiny_ds.spec.seed + 1)
+    other = make_clustered_data(spec, cluster_sizes=(3, 1),
+                                transforms=("rot0", "rot180"))
+    assert data_fingerprint(tiny_ds) != data_fingerprint(other)
+    assert data_fingerprint(tiny_ds) == data_fingerprint(tiny_ds)
+    cache = EngineCache()
+    run_experiment("el", CFG, tiny_ds, rounds=2, cache=cache, **KW)
+    run_experiment("el", CFG, other, rounds=2, cache=cache, **KW)
+    assert cache.evaluator_builds == 2
+    run_experiment("el", CFG, tiny_ds, rounds=2, cache=cache, **KW)
+    assert cache.evaluator_builds == 2           # warm again
+
+
+def test_compile_count_counts_retraces_on_new_train_shapes(tiny_ds):
+    """A same-spec cell fed a different train shape RETRACES the cached
+    jitted segment program; the compile counter must count that, or
+    zero-recompile assertions would falsely pass while XLA recompiles."""
+    spec2 = dataclasses.replace(tiny_ds.spec, samples_per_class=12)
+    bigger = make_clustered_data(spec2, cluster_sizes=(3, 1),
+                                 transforms=("rot0", "rot180"))
+    cache = EngineCache()
+    run_experiment("el", CFG, tiny_ds, rounds=2, cache=cache, **KW)
+    c1 = cache.compile_count
+    run_experiment("el", CFG, bigger, rounds=2, cache=cache, **KW)
+    assert cache.misses == 1 and cache.hits == 1       # one shared entry
+    assert cache.compile_count == c1 + 2               # retrace + evaluator
+    c2 = cache.compile_count
+    run_experiment("el", CFG, bigger, rounds=2, cache=cache, **KW)
+    assert cache.compile_count == c2                   # warm for both shapes
+
+
+# ------------------------------------------------------------ aggregation --
+def test_aggregate_matches_manual(tiny_ds):
+    sweep = run_sweep([_cell("el", tiny_ds)], SEEDS)
+    cres = sweep.cells[0]
+    s = cres.summary
+    assert s["n_seeds"] == len(SEEDS)
+    assert s["eval_rounds"] == [2, 4]
+    for row in s["trajectory"]:
+        fas = [dict(r.fair_acc)[row["round"]] for r in cres.results]
+        assert row["n"] == len(SEEDS)
+        assert row["fair_acc_mean"] == pytest.approx(np.mean(fas))
+        assert row["fair_acc_std"] == pytest.approx(np.std(fas))
+    assert s["total_bytes"]["mean"] == pytest.approx(
+        np.mean([r.comm.bytes[-1] for r in cres.results]))
+    assert s["dp"]["mean"] == pytest.approx(
+        np.mean([r.dp for r in cres.results]))
+    np.testing.assert_allclose(
+        s["final_acc_mean"],
+        np.mean([r.final_acc for r in cres.results], axis=0))
+
+
+def test_sweep_to_target_table_and_json(tiny_ds, tmp_path):
+    path = tmp_path / "sweep.json"
+    sweep = run_sweep([_cell("el", tiny_ds)], SEEDS, targets=(0.0, 2.0),
+                      json_path=path)
+    tt = sweep.cells[0].summary["to_target"]
+    assert tt["0"]["reached_frac"] == 1.0        # acc >= 0 at the first eval
+    assert tt["0"]["bytes"]["mean"] > 0
+    assert tt["2"]["reached_frac"] == 0.0        # acc can never reach 2.0
+    assert "bytes" not in tt["2"]
+    import json
+    blob = json.loads(path.read_text())
+    assert blob["seeds"] == list(SEEDS)
+    assert blob["cells"]["el"]["summary"]["n_seeds"] == len(SEEDS)
+    assert blob["cache"]["entries"] == 1
+
+
+def test_sweep_rejects_seed_kwarg_and_dup_names(tiny_ds):
+    cell = _cell("el", tiny_ds)
+    cell.kwargs["seed"] = 7
+    with pytest.raises(ValueError, match="seed"):
+        run_sweep([cell], SEEDS)
+    with pytest.raises(ValueError, match="duplicate"):
+        run_sweep([_cell("el", tiny_ds), _cell("el", tiny_ds)], SEEDS)
+
+
+# ------------------------------------------------------------- regression --
+def test_target_acc_with_unreachable_eval_raises(tiny_ds):
+    """Regression: target_acc + eval_every > rounds used to yield a run
+    that could never early-exit; now it raises up front."""
+    with pytest.raises(ValueError, match="eval_every"):
+        run_experiment("el", CFG, tiny_ds, rounds=4, target_acc=0.5,
+                       **{**KW, "eval_every": 8})
+    with pytest.raises(ValueError, match="eval_every"):
+        run_experiment("el", CFG, tiny_ds, rounds=0, target_acc=0.5, **KW)
+    # without target_acc the same schedule stays legal (final-round eval)
+    res = run_experiment("el", CFG, tiny_ds, rounds=2,
+                         **{**KW, "eval_every": 8})
+    assert res.comm.rounds[-1] == 2
