@@ -21,7 +21,10 @@ from repro.sweep import SweepCell, run_sweep
 
 from . import common
 
-PRESETS = ("ideal", "wan", "edge-churn", "hostile")
+# netsim v1 presets + the v2 axes (bursty links / core-edge tiers / async
+# stale gossip / all three at once)
+PRESETS = ("ideal", "wan", "edge-churn", "hostile",
+           "bursty-wan", "core-edge", "async-edge", "edge-v2")
 
 
 def _settled_frac(res) -> float:
@@ -97,6 +100,44 @@ def smoke() -> dict:
             "preset": "edge-churn",
             "sim_seconds": float(res.comm.seconds[-1]),
             "total_bytes": float(res.comm.bytes[-1])}
+
+
+def smoke_v2() -> dict:
+    """netsim-v2 exercise for the dry-run matrix: 2 rounds of EL under
+    ``edge-v2`` (bursty + core/edge tiers + async stale gossip, all in one
+    preset) plus a channel-statistics sanity check — cheap enough to run
+    on every invocation so the v2 paths can't rot."""
+    import dataclasses
+
+    from repro import netsim
+    from repro.configs.facade_paper import lenet
+    from repro.data.synthetic import SynthSpec
+
+    spec = SynthSpec(n_classes=4, image_size=16, samples_per_class=8,
+                     test_per_class=8, seed=3)
+    ds = common.make_ds(spec, (3, 1), ("rot0", "rot180"))
+    cfg = lenet(smoke=True).replace(n_classes=4)
+    net = NetworkConfig.preset("edge-v2")
+    res = common.run_algo("el", cfg, ds, 2, True, local_steps=2,
+                          batch_size=4, eval_every=1, net=net)
+    # async staleness must shed traffic vs the same preset run sync
+    sync = dataclasses.replace(net, async_gossip=False)
+    res_sync = common.run_algo("el", cfg, ds, 2, True, local_steps=2,
+                               batch_size=4, eval_every=1, net=sync)
+    stats = netsim.channel_stats(net, n=6, rounds=200)
+    ok = (len(res.comm.seconds) == 2
+          and np.isfinite(res.comm.bytes[-1])
+          and 0 <= res.comm.seconds[-1] < np.inf
+          and res.comm.bytes[-1] <= res_sync.comm.bytes[-1]
+          and stats["symmetric"] and stats["binary"]
+          and abs(stats["bad_rate"] - net.burst.stationary_bad()) < 0.15)
+    return {"status": "ok" if ok else "fail",
+            "preset": "edge-v2",
+            "sim_seconds": float(res.comm.seconds[-1]),
+            "total_bytes": float(res.comm.bytes[-1]),
+            "sync_bytes": float(res_sync.comm.bytes[-1]),
+            "channel_bad_rate": stats["bad_rate"],
+            "channel_mean_burst_len": stats["mean_burst_len"]}
 
 
 if __name__ == "__main__":

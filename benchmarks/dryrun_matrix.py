@@ -43,6 +43,19 @@ def run(quick: bool = True) -> dict:
               f"({net_rec['sim_seconds']:.2f} sim-s, "
               f"{net_rec['total_bytes']/1e3:.1f} KB)")
 
+    # netsim-v2 smoke: bursty + core/edge tiers + async stale gossip in one
+    # preset, plus channel statistics; reported, never aborts the table
+    try:
+        v2_rec = churn_resilience.smoke_v2()
+    except Exception as e:
+        v2_rec = {"status": "fail", "preset": "edge-v2", "error": repr(e)}
+        print(f"netsim-v2 smoke [edge-v2]: FAIL ({e!r})")
+    else:
+        print(f"netsim-v2 smoke [{v2_rec['preset']}]: {v2_rec['status']} "
+              f"({v2_rec['total_bytes']/1e3:.1f} KB async vs "
+              f"{v2_rec['sync_bytes']/1e3:.1f} KB sync, "
+              f"bad-rate {v2_rec['channel_bad_rate']:.2f})")
+
     # segment-engine smoke: one fused span, parity-checked vs the legacy
     # driver (keeps the scan path from rotting); reported, never aborts
     try:
@@ -72,8 +85,8 @@ def run(quick: bool = True) -> dict:
     if not recs:
         print("no dry-run records; run `python -m repro.launch.dryrun --all` "
               "(and --multi-pod) first")
-        return {"netsim_smoke": net_rec, "engine_smoke": eng_rec,
-                "sweep_smoke": sweep_rec}
+        return {"netsim_smoke": net_rec, "netsim_v2_smoke": v2_rec,
+                "engine_smoke": eng_rec, "sweep_smoke": sweep_rec}
     rows = []
     ok = fail = skip = 0
     for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
@@ -98,8 +111,8 @@ def run(quick: bool = True) -> dict:
     print(f"\n{ok} compiled, {fail} failed, {skip} skipped "
           f"(full-attention long_500k carve-outs)")
     payload = {"n_ok": ok, "n_fail": fail, "n_skip": skip, "records": recs,
-               "netsim_smoke": net_rec, "engine_smoke": eng_rec,
-               "sweep_smoke": sweep_rec}
+               "netsim_smoke": net_rec, "netsim_v2_smoke": v2_rec,
+               "engine_smoke": eng_rec, "sweep_smoke": sweep_rec}
     common.save("dryrun_matrix", payload)
     return payload
 

@@ -1,13 +1,20 @@
 """netsim demo: the same FACADE experiment on an ideal network, on flaky
-edge devices, and through a scheduled partition-then-heal scenario.
+edge devices, through a scheduled partition-then-heal scenario, and under
+the netsim-v2 axes — bursty Gilbert–Elliott links, a heterogeneous
+core/edge link fabric, and asynchronous stale gossip.
 
     PYTHONPATH=src python examples/netsim_demo.py
 
-Shows the three netsim pieces composing with an unmodified algorithm:
-preset conditions (churn/loss/stragglers), the latency/bandwidth cost
-model (CommLog grows a simulated-time axis), and seeded event schedules
-(a reproducible burst failure + partition). Swap "facade" for any of
-"el" / "dpsgd" / "deprl" / "dac" — the `net=` argument works for all.
+Shows the netsim pieces composing with an unmodified algorithm: preset
+conditions (churn/loss/stragglers), the latency/bandwidth cost model
+(CommLog grows a simulated-time axis), seeded event schedules (a
+reproducible burst failure + partition), per-link Markov loss state and
+staleness buffers carried on device through the scan engine. Note how
+"async-edge" trades a little accuracy for traffic AND simulated hours
+(stale stragglers send nothing and never gate the round) — the
+communication-cost axis the paper's Fig. 7 measures. Swap "facade" for
+any of "el" / "dpsgd" / "deprl" / "dac" — the `net=` argument works for
+all.
 """
 import pathlib
 import sys
@@ -37,6 +44,12 @@ def main():
         "ideal": NetworkConfig.preset("ideal"),
         "edge-churn": NetworkConfig.preset("edge-churn"),
         "wan+events": bad_day,
+        # netsim v2: bursty links / core-edge tiers / async stale gossip,
+        # then all three at once
+        "bursty-wan": NetworkConfig.preset("bursty-wan"),
+        "core-edge": NetworkConfig.preset("core-edge"),
+        "async-edge": NetworkConfig.preset("async-edge"),
+        "edge-v2": NetworkConfig.preset("edge-v2"),
     }
 
     print(f"{'scenario':<12} {'majority':>9} {'minority':>9} "

@@ -10,9 +10,9 @@ import jax
 import jax.numpy as jnp
 
 from .. import split, topology
-from ..bindings import Binding, local_sgd
+from ..bindings import Binding, gossip_mix, local_sgd
 from ..state import BaselineState, freeze_inactive
-from ..netwire import comm_info, masked_topology
+from ..netwire import comm_info, masked_topology, stale_view
 
 
 @dataclasses.dataclass(frozen=True)
@@ -30,7 +30,7 @@ def init_dac_extra(n: int):
 
 
 def dac_round(cfg: DACConfig, binding: Binding, state: BaselineState,
-              batches, net=None):
+              batches, net=None, gossip=None):
     n = cfg.n_nodes
     key, k_top = jax.random.split(state.rng)
     sim = state.extra["sim"]
@@ -43,6 +43,11 @@ def dac_round(cfg: DACConfig, binding: Binding, state: BaselineState,
     adj = jnp.maximum(adj, adj.T)  # symmetrize (push-pull exchange)
     adj = masked_topology(net, adj)
 
+    # what each peer DELIVERS this round: its published snapshot when it
+    # is stale (async gossip), its live params otherwise
+    vis = stale_view(net, gossip, state.params)
+    delivered_params = state.params if vis is None else vis
+
     # --- similarity update: inverse loss of peer's model on local batch ---
     first = jax.tree.map(lambda b: b[:, 0], batches)
 
@@ -50,7 +55,7 @@ def dac_round(cfg: DACConfig, binding: Binding, state: BaselineState,
         my_batch = jax.tree.map(lambda b: b[i], first)
 
         def loss_of(j):
-            pj = jax.tree.map(lambda p: p[j], state.params)
+            pj = jax.tree.map(lambda p: p[j], delivered_params)
             return binding.loss(pj, my_batch)
 
         return jax.vmap(loss_of)(nbr[i])                     # [r]
@@ -66,9 +71,7 @@ def dac_round(cfg: DACConfig, binding: Binding, state: BaselineState,
 
     # --- aggregate with similarity weights, then local train ---
     w = topology.weighted_mixing(adj, jnp.maximum(new_sim, 1e-6))
-    params = jax.tree.map(
-        lambda p: jnp.einsum("ij,j...->i...", w.astype(p.dtype), p),
-        state.params)
+    params = gossip_mix(w, state.params, vis)
 
     params = jax.vmap(lambda p, b: local_sgd(binding, p, b, cfg.lr))(
         params, batches)

@@ -11,9 +11,9 @@ import jax
 import jax.numpy as jnp
 
 from .. import split, topology
-from ..bindings import Binding, local_sgd
+from ..bindings import Binding, gossip_mix, local_sgd
 from ..state import BaselineState, freeze_inactive
-from ..netwire import comm_info, masked_topology
+from ..netwire import comm_info, masked_topology, stale_view
 
 
 @dataclasses.dataclass(frozen=True)
@@ -25,7 +25,7 @@ class DeprlConfig:
 
 
 def deprl_round(cfg: DeprlConfig, binding: Binding, state: BaselineState,
-                batches, net=None):
+                batches, net=None, gossip=None):
     """state.params [n, ...] full models; only cores are mixed."""
     adj = masked_topology(net, topology.ring(cfg.n_nodes, cfg.degree))
     w = topology.mixing_matrix(adj)
@@ -34,8 +34,10 @@ def deprl_round(cfg: DeprlConfig, binding: Binding, state: BaselineState,
         return split.split_params(params, binding.head_keys)
 
     cores, heads = jax.vmap(split_n)(state.params)
-    cores = jax.tree.map(
-        lambda c: jnp.einsum("ij,j...->i...", w.astype(c.dtype), c), cores)
+    pub_cores = None
+    if gossip is not None:
+        pub_cores, _ = jax.vmap(split_n)(gossip)
+    cores = gossip_mix(w, cores, stale_view(net, pub_cores, cores))
 
     def local(core, head, bh):
         p = split.merge_params(core, head)

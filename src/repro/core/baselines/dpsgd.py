@@ -8,9 +8,9 @@ import jax
 import jax.numpy as jnp
 
 from .. import split, topology
-from ..bindings import Binding, local_sgd
+from ..bindings import Binding, gossip_mix, local_sgd
 from ..state import BaselineState, freeze_inactive
-from ..netwire import comm_info, masked_topology
+from ..netwire import comm_info, masked_topology, stale_view
 
 
 @dataclasses.dataclass(frozen=True)
@@ -22,15 +22,15 @@ class DpsgdConfig:
 
 
 def dpsgd_round(cfg: DpsgdConfig, binding: Binding, state: BaselineState,
-                batches, net=None):
+                batches, net=None, gossip=None):
     adj = masked_topology(net, topology.ring(cfg.n_nodes, cfg.degree))
     w = topology.mixing_matrix(adj)
 
-    # D-PSGD order: local train, then exchange+aggregate
+    # D-PSGD order: local train, then exchange+aggregate (stale neighbors
+    # contribute their last published model instead of today's)
     params = jax.vmap(lambda p, b: local_sgd(binding, p, b, cfg.lr))(
         state.params, batches)
-    params = jax.tree.map(
-        lambda p: jnp.einsum("ij,j...->i...", w.astype(p.dtype), p), params)
+    params = gossip_mix(w, params, stale_view(net, gossip, params))
     if net is not None:
         params = freeze_inactive(net.active, params, state.params)
 

@@ -9,9 +9,9 @@ import jax
 import jax.numpy as jnp
 
 from .. import split, topology
-from ..bindings import Binding, local_sgd
+from ..bindings import Binding, gossip_mix, local_sgd
 from ..state import BaselineState, freeze_inactive
-from ..netwire import comm_info, masked_topology
+from ..netwire import comm_info, masked_topology, stale_view
 
 
 @dataclasses.dataclass(frozen=True)
@@ -23,17 +23,17 @@ class ELConfig:
 
 
 def el_round(cfg: ELConfig, binding: Binding, state: BaselineState, batches,
-             net=None):
+             net=None, gossip=None):
     """batches: pytree leading [n, H, B, ...]; net: optional
-    ``netsim.RoundConditions`` masks (see ``facade_round``)."""
+    ``netsim.RoundConditions`` masks (see ``facade_round``); gossip:
+    optional published-snapshot tree (async stale gossip)."""
     key, sub = jax.random.split(state.rng)
     adj = topology.random_regular(sub, cfg.n_nodes, cfg.degree)
     adj = masked_topology(net, adj)
     w = topology.mixing_matrix(adj)
 
-    params = jax.tree.map(
-        lambda p: jnp.einsum("ij,j...->i...", w.astype(p.dtype), p),
-        state.params)
+    params = gossip_mix(w, state.params,
+                        stale_view(net, gossip, state.params))
     params = jax.vmap(lambda p, b: local_sgd(binding, p, b, cfg.lr))(
         params, batches)
     if net is not None:

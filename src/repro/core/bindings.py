@@ -47,6 +47,35 @@ def local_sgd(binding: "Binding", params, batches_h, lr):
     return params
 
 
+def gossip_mix(w, tree, visible=None):
+    """Row-stochastic gossip mixing (Eq. 3): ``out_i = sum_j W_ij x_j``
+    over node-stacked pytrees — THE one mixing definition shared by FACADE
+    and every baseline, so the engine's parity guarantees stay
+    algorithm-independent (like :func:`local_sgd` for the local phase).
+
+    ``visible`` (async stale gossip, ``netwire.stale_view``): an optional
+    same-structure tree of the per-node snapshots *neighbors observe* —
+    stale nodes expose their last published state there. Neighbor terms
+    then read ``visible`` while each node's self-term always uses its own
+    fresh leaf: ``out_i = sum_j W_ij v_j + W_ii (x_i - v_i)``. With no
+    stale node (``visible == tree``) the correction is exactly zero.
+    """
+    if visible is None:
+        return jax.tree.map(
+            lambda p: jnp.einsum("ij,j...->i...", w.astype(p.dtype), p),
+            tree)
+    diag = jnp.diagonal(w)
+
+    def mix(p, v):
+        out = jnp.einsum("ij,j...->i...", w.astype(p.dtype),
+                         v.astype(p.dtype))
+        d = diag.reshape((diag.shape[0],) + (1,) * (p.ndim - 1))
+        return (out + d.astype(p.dtype) * (p - v.astype(p.dtype))).astype(
+            p.dtype)
+
+    return jax.tree.map(mix, tree, visible)
+
+
 def _untie_lm_head(cfg, params, key):
     if "lm_head" not in params:
         params = dict(params)

@@ -26,7 +26,11 @@ eval split changes the fingerprint, never silently reuses a stale
 evaluator; train data is passed per call and never cached. ``rounds`` and
 ``eval_every`` are deliberately NOT key fields — segment programs are
 keyed per ``(length, warmup)`` inside the engine, so different eval
-schedules share an entry safely.
+schedules share an entry safely. The netsim-v2 knobs (``burst`` /
+``classes`` / ``async_gossip`` / ``max_staleness``) need no extra key
+field: they live on the frozen ``NetworkConfig``, which is already the
+``net`` component of the key — ``tests/test_property.py`` pins that
+perturbing ANY ``NetworkConfig`` field forks the key.
 
 Donation caveat: segment programs donate their input :class:`EngineCarry`
 buffers. Reusing a cached engine across runs is safe precisely because
@@ -123,7 +127,8 @@ class CacheEntry:
             self.program.round_fn, warmup_fn=self.program.warmup_fn,
             net=spec.net, n=spec.n, local_steps=spec.local_steps,
             batch_size=spec.batch_size,
-            track_cluster=self.program.track_cluster)
+            track_cluster=self.program.track_cluster,
+            mixable_of=self.program.mixable_of)
 
     def setup(self, key):
         return self.program.setup(key)

@@ -81,7 +81,7 @@ class SegmentEngine:
 
     def __init__(self, round_fn: Callable, *, n: int, local_steps: int,
                  batch_size: int, net=None, warmup_fn: Callable | None = None,
-                 track_cluster: bool = False):
+                 track_cluster: bool = False, mixable_of: Callable | None = None):
         self._round = round_fn
         self._warm = warmup_fn if warmup_fn is not None else round_fn
         self._net = net
@@ -89,6 +89,7 @@ class SegmentEngine:
         self._h = local_steps
         self._b = batch_size
         self._track = track_cluster
+        self._mixable_of = mixable_of
         self._compiled: dict[tuple[int, bool], Callable] = {}
         # compile_count tracks XLA compiles, not just fresh (length, warmup)
         # builds: a cached jitted segment RETRACES when the train arrays
@@ -98,25 +99,52 @@ class SegmentEngine:
         self._traced: set[tuple] = set()
         self.compile_count = 0
 
+    # -- run-level carry ----------------------------------------------------
+    def init_carry(self, state, k_data) -> EngineCarry:
+        """Mint the run's :class:`EngineCarry`: algorithm state, data PRNG,
+        plus the netsim-v2 on-device state — the Gilbert–Elliott channel
+        (``net.burst``) and the async staleness buffer (``net.async_gossip``;
+        a leaf-for-leaf COPY of the initial mixable state so the buffer
+        never aliases the donated training buffers)."""
+        net, n = self._net, self._n
+        chan = netsim.init_channel(net, n) if net is not None else None
+        gossip = None
+        if net is not None and net.async_gossip:
+            if self._mixable_of is None:
+                raise ValueError(
+                    "async_gossip needs mixable_of: construct the "
+                    "SegmentEngine with mixable_of=<state -> gossip tree> "
+                    "(runner.algo_program provides it)")
+            gossip = netsim.init_gossip(net, n, self._mixable_of(state))
+        return EngineCarry(state, k_data, chan, gossip)
+
     # -- one segment = one jitted scan --------------------------------------
     def _build(self, length: int, warmup: bool) -> Callable:
         round_fn = self._warm if warmup else self._round
         net, n, h, b, track = self._net, self._n, self._h, self._b, self._track
+        mixable_of = self._mixable_of
 
         def segment(carry, start, train_x, train_y):
             def step(carry, rnd):
-                state, k_data = carry
+                state, k_data, chan, gossip = carry
                 k_data, k_b = jax.random.split(k_data)
                 batches = pipeline.sample_round_batches(
                     k_b, train_x, train_y, h, b)
-                conds = (netsim.round_conditions(net, n, rnd)
-                         if net is not None else None)
-                state, info = round_fn(state, batches, net=conds)
+                conds = published = None
+                if net is not None:
+                    conds, chan = netsim.advance_conditions(net, n, rnd,
+                                                            chan)
+                    conds, published = netsim.apply_async(net, conds, gossip)
+                state, info = round_fn(state, batches, net=conds,
+                                       gossip=published)
+                if published is not None:
+                    gossip = netsim.fold_gossip(net, gossip, conds,
+                                                mixable_of(state))
                 out = {"round_bytes": info["round_bytes"],
                        "round_s": round_seconds(net, info, conds, h)}
                 if track:
                     out["cluster_id"] = info["cluster_id"]
-                return EngineCarry(state, k_data), out
+                return EngineCarry(state, k_data, chan, gossip), out
 
             rnds = start + jnp.arange(length, dtype=jnp.int32)
             return jax.lax.scan(step, carry, rnds)

@@ -21,9 +21,11 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro import netsim
+
 from . import split, topology
-from .bindings import Binding, local_sgd
-from .netwire import comm_info, masked_topology
+from .bindings import Binding, gossip_mix, local_sgd
+from .netwire import comm_info, masked_topology, stale_view
 from .state import FacadeState, freeze_inactive
 
 
@@ -39,20 +41,20 @@ class FacadeConfig:
 
 
 # --------------------------------------------------------------------------
-def _mix_cores(w, cores):
-    return jax.tree.map(
-        lambda c: jnp.einsum("ij,j...->i...", w.astype(c.dtype), c), cores)
-
-
-def _aggregate_heads(adj, cluster_id, heads, k):
+def _aggregate_heads(adj, cluster_id, heads, k, sent_heads=None):
     """Eq. 4: for each node i and cluster j, average the heads *sent* by
     neighbors claiming cluster j together with i's own stored head j.
 
-    heads [n, k, ...]; sent head of node j' = heads[j', cid_j'].
+    heads [n, k, ...]; sent head of node j' = sent_heads[j', cid_j'].
+    ``cluster_id``/``sent_heads`` describe what each node PUBLISHES this
+    round (under async gossip a stale node publishes its old snapshot);
+    ``heads`` is always the receiver's own fresh stored bank.
     """
     n = adj.shape[0]
+    if sent_heads is None:
+        sent_heads = heads
     sent = jax.tree.map(
-        lambda h: h[jnp.arange(n), cluster_id], heads)      # [n, ...]
+        lambda h: h[jnp.arange(n), cluster_id], sent_heads)  # [n, ...]
     onehot = jax.nn.one_hot(cluster_id, k, dtype=jnp.float32)  # [n, k]
     # cnt[i, c] = number of neighbors of i claiming cluster c
     cnt = jnp.einsum("ij,jc->ic", adj, onehot)              # [n, k]
@@ -78,7 +80,7 @@ def _select_heads(binding: Binding, cores, heads, batches):
 
 # --------------------------------------------------------------------------
 def facade_round(fcfg: FacadeConfig, binding: Binding, state: FacadeState,
-                 batches, warmup: bool = False, net=None):
+                 batches, warmup: bool = False, net=None, gossip=None):
     """One synchronous FACADE round for all nodes.
 
     batches: pytree with leading [n, H, B, ...] — per-node, per-local-step.
@@ -87,6 +89,9 @@ def facade_round(fcfg: FacadeConfig, binding: Binding, state: FacadeState,
     drawn topology is filtered through :func:`topology.effective_adjacency`,
     churned-out nodes neither mix nor train (state frozen), and comm bytes
     count the directed edges that actually carried a message.
+    gossip: optional async-gossip published-snapshot dict (``cores`` /
+    ``heads`` / ``cluster_id``): stale nodes (``net.stale``) expose those
+    to their neighbors instead of this round's fresh state.
     Returns (new_state, info dict with losses/selection/comm bytes).
     """
     n, k = fcfg.n_nodes, fcfg.k
@@ -94,9 +99,21 @@ def facade_round(fcfg: FacadeConfig, binding: Binding, state: FacadeState,
     adj = masked_topology(net, topology.random_regular(subkey, n, fcfg.degree))
     w = topology.mixing_matrix(adj)
 
+    # --- what each node publishes this round (== its fresh state unless
+    # --- it stays stale under async gossip) ---
+    vis_cores = stale_view(net, None if gossip is None else gossip["cores"],
+                           state.cores)
+    sent_heads, sent_cid = None, state.cluster_id
+    if gossip is not None and net is not None and net.stale is not None:
+        sent_heads = netsim.tree_select(net.stale, gossip["heads"],
+                                        state.heads)
+        sent_cid = jnp.where(net.stale > 0, gossip["cluster_id"],
+                             state.cluster_id).astype(jnp.int32)
+
     # --- aggregation (steps 2a/2b) ---
-    cores = _mix_cores(w, state.cores)
-    heads = _aggregate_heads(adj, state.cluster_id, state.heads, k)
+    cores = gossip_mix(w, state.cores, vis_cores)
+    heads = _aggregate_heads(adj, sent_cid, state.heads, k,
+                             sent_heads=sent_heads)
 
     # --- cluster identification (step 2c) on the first local batch ---
     first = jax.tree.map(lambda b: b[:, 0], batches)
@@ -149,7 +166,7 @@ def final_allreduce(fcfg: FacadeConfig, state: FacadeState) -> FacadeState:
     n, k = fcfg.n_nodes, fcfg.k
     adj = topology.fully_connected(n)
     w = topology.mixing_matrix(adj)
-    cores = _mix_cores(w, state.cores)
+    cores = gossip_mix(w, state.cores)
     heads = _aggregate_heads(adj, state.cluster_id, state.heads, k)
     return state._replace(cores=cores, heads=heads)
 

@@ -7,6 +7,16 @@ and per-message payload so the runner can feed the timing model. Keeping
 the logic here (used by ``facade_round`` and all four baselines alike)
 means adding another algorithm needs no netsim-specific code, and the
 byte-accounting contract lives in exactly one place.
+
+netsim v2 additions, all keyed off ``conds.stale`` (the async-gossip
+stay-stale mask; ``None`` on every synchronous path):
+
+* :func:`stale_view` — the per-node tree neighbors observe (stale nodes
+  expose their published snapshot), fed to ``bindings.gossip_mix``;
+* :func:`comm_info` counts no fresh bytes for messages a stale node
+  "sends" — its neighbors reuse the cached copy they already hold;
+* :func:`round_seconds` drops stale nodes from the round's gating set —
+  their compute overlaps later rounds instead of stretching this one.
 """
 from __future__ import annotations
 
@@ -24,17 +34,32 @@ def masked_topology(net, adj):
     return topology.effective_adjacency(adj, net.edge_mask, net.active)
 
 
+def stale_view(net, published, fresh):
+    """The node-stacked tree *neighbors observe* under async gossip: the
+    published snapshot where ``conds.stale == 1``, the fresh leaves
+    elsewhere. ``None`` (meaning: everyone fresh, take the plain mixing
+    path) whenever async gossip is off or no buffer was supplied."""
+    if net is None or published is None or net.stale is None:
+        return None
+    return netsim.tree_select(net.stale, published, fresh)
+
+
 def comm_info(net, adj_eff, payload_bytes, nominal_sends):
     """round_bytes accounting + netsim extras.
 
     Without netsim, keep the historical nominal count (``n * degree``
     directed pushes). Under netsim, count the directed edges that actually
-    carried a message this round.
+    carried a message this round; under async gossip, edges out of a
+    stale node carry no NEW bytes (neighbors reuse its cached snapshot),
+    so its rows are excluded.
     """
     if net is None:
         return {"round_bytes": jnp.asarray(
             nominal_sends * payload_bytes, jnp.float32)}
-    return {"round_bytes": adj_eff.sum() * payload_bytes,
+    sends = adj_eff
+    if net.stale is not None:
+        sends = adj_eff * (1.0 - net.stale)[:, None]
+    return {"round_bytes": sends.sum() * payload_bytes,
             "adj_eff": adj_eff,
             "payload_bytes": jnp.asarray(payload_bytes, jnp.float32)}
 
@@ -44,10 +69,20 @@ def round_seconds(net, info, conds, local_steps: int):
 
     Always a float32 scalar (0 when netsim is off) so the segment engine
     can stack it as a scan output; the legacy per-round driver feeds the
-    same ingredients to :func:`repro.netsim.round_time` directly.
+    same ingredients to :func:`repro.netsim.round_time` directly. Stale
+    nodes (async gossip) are removed from the gating set — only nodes
+    that must finish this round can stretch it.
     """
     if net is None:
         return jnp.float32(0.0)
-    return netsim.round_time(net, info["adj_eff"], info["payload_bytes"],
-                             conds.active, conds.straggler,
+    active = conds.active
+    adj_gate = info["adj_eff"]
+    if conds.stale is not None:
+        # stale nodes neither gate the round nor make anyone wait on a
+        # transfer: receivers reuse the cached snapshot (column mask),
+        # and the stale node's own compute overlaps later rounds (gate)
+        active = active * (1.0 - conds.stale)
+        adj_gate = adj_gate * (1.0 - conds.stale)[None, :]
+    return netsim.round_time(net, adj_gate, info["payload_bytes"],
+                             active, conds.straggler,
                              local_steps=local_steps)

@@ -64,13 +64,16 @@ class RunResult:
 # --------------------------------------------------------------------------
 class AlgoSetup(NamedTuple):
     """Everything the drivers need, behind one stepper signature:
-    ``round_fn(state, batches, net=conds) -> (state, info)``."""
+    ``round_fn(state, batches, net=conds, gossip=published) ->
+    (state, info)``."""
     state: Any                 # initial stacked state
     round_fn: Callable         # main-phase round
     warmup_fn: Callable        # warmup-phase round (== round_fn off-FACADE)
     models_of: Callable        # state -> deployable models, stacked [n, ...]
     finalize: Callable         # applied to the state after the last round
     track_cluster: bool        # info carries a per-round cluster_id [n]
+    mixable_of: Callable       # state -> what gossip exchanges (async
+    #                            staleness buffers snapshot this tree)
 
 
 class AlgoProgram(NamedTuple):
@@ -83,10 +86,12 @@ class AlgoProgram(NamedTuple):
     models_of: Callable
     finalize: Callable
     track_cluster: bool
+    mixable_of: Callable
 
     def setup(self, key) -> AlgoSetup:
         return AlgoSetup(self.init_state(key), self.round_fn, self.warmup_fn,
-                         self.models_of, self.finalize, self.track_cluster)
+                         self.models_of, self.finalize, self.track_cluster,
+                         self.mixable_of)
 
 
 def algo_program(algo: str, binding: Binding, n: int, k: int, *,
@@ -106,7 +111,9 @@ def algo_program(algo: str, binding: Binding, n: int, k: int, *,
                                         binding, warmup=True),
             models_of=lambda s: facade_mod.node_models(s, binding),
             finalize=functools.partial(facade_mod.final_allreduce, fcfg),
-            track_cluster=True)
+            track_cluster=True,
+            mixable_of=lambda s: {"cores": s.cores, "heads": s.heads,
+                                  "cluster_id": s.cluster_id})
     if algo in ("el", "dpsgd", "deprl", "dac"):
         cfg_cls = {"el": ELConfig, "dpsgd": DpsgdConfig,
                    "deprl": DeprlConfig, "dac": DACConfig}[algo]
@@ -121,7 +128,8 @@ def algo_program(algo: str, binding: Binding, n: int, k: int, *,
                 extra=init_dac_extra(n) if algo == "dac" else None),
             round_fn=fn, warmup_fn=fn,
             models_of=lambda s: s.params,
-            finalize=lambda s: s, track_cluster=False)
+            finalize=lambda s: s, track_cluster=False,
+            mixable_of=lambda s: s.params)
     raise ValueError(f"unknown algorithm {algo!r}")
 
 
@@ -306,7 +314,7 @@ def _drive_engine(eng, setup: AlgoSetup, hist: _History, k_data,
     """Segment-engine driver: one dispatch + one host transfer per span.
     ``eng`` comes from the run's :class:`EngineCache` entry, so repeated
     runs of one config reuse its compiled segment programs."""
-    carry = EngineCarry(setup.state, k_data)
+    carry = eng.init_carry(setup.state, k_data)
     for seg in segment_plan(rounds, eval_every, warmup_rounds):
         carry, outs = eng.run_segment(carry, seg.start, seg.length,
                                       train_x, train_y, warmup=seg.warmup)
@@ -344,19 +352,29 @@ def _drive_legacy(setup: AlgoSetup, hist: _History, k_data, train_x, train_y,
     the benchmark baseline."""
     round_main = jax.jit(setup.round_fn)
     round_warm = jax.jit(setup.warmup_fn)
+    chan = gossip = None
     if net is not None:
-        conds_fn = jax.jit(lambda rnd: netsim.round_conditions(net, n, rnd))
+        conds_fn = jax.jit(
+            lambda rnd, chan: netsim.advance_conditions(net, n, rnd, chan))
         time_fn = jax.jit(functools.partial(
             netwire.round_seconds, net, local_steps=local_steps))
+        chan = netsim.init_channel(net, n)
+        gossip = netsim.init_gossip(net, n, setup.mixable_of(setup.state))
 
     state = setup.state
     for rnd in range(rounds):
         k_data, k_b = jax.random.split(k_data)
         batches = pipeline.sample_round_batches(
             k_b, train_x, train_y, local_steps, batch_size)
-        conds = conds_fn(rnd) if net is not None else None
+        conds = published = None
+        if net is not None:
+            conds, chan = conds_fn(rnd, chan)
+            conds, published = netsim.apply_async(net, conds, gossip)
         fn = round_warm if rnd < warmup_rounds else round_main
-        state, info = fn(state, batches, net=conds)
+        state, info = fn(state, batches, net=conds, gossip=published)
+        if published is not None:
+            gossip = netsim.fold_gossip(net, gossip, conds,
+                                        setup.mixable_of(state))
         round_s = 0.0
         if net is not None:
             round_s = float(time_fn(info, conds))

@@ -32,11 +32,16 @@ class BaselineState(NamedTuple):
 
 class EngineCarry(NamedTuple):
     """Scan carry of the segment engine (core/engine.py): the algorithm
-    state plus the data-sampling PRNG key. The round counter rides in the
-    scanned xs, so the whole carry is donated buffer-for-buffer between
-    segments (``donate_argnums``) — node-stacked params update in place."""
+    state plus the data-sampling PRNG key, plus the netsim-v2 on-device
+    state — the bursty-link channel and the async-gossip staleness buffer
+    (both ``None`` unless the run's ``NetworkConfig`` enables them). The
+    round counter rides in the scanned xs, so the whole carry is donated
+    buffer-for-buffer between segments (``donate_argnums``) —
+    node-stacked params update in place."""
     state: Any           # FacadeState | BaselineState
     k_data: Any          # PRNG key consumed by pipeline.sample_round_batches
+    chan: Any = None     # netsim.ChannelState (Gilbert–Elliott) | None
+    gossip: Any = None   # netsim.GossipState (async staleness) | None
 
 
 def _stack_n(tree, n):
@@ -71,11 +76,11 @@ def init_baseline_state(binding, key, n: int, extra=None) -> BaselineState:
 
 def freeze_inactive(active, new_tree, old_tree):
     """netsim churn semantics: nodes with ``active == 0`` sat the round out,
-    so every leaf keeps its old value along the leading node axis."""
-    def pick(new, old):
-        m = active.reshape((active.shape[0],) + (1,) * (new.ndim - 1))
-        return jnp.where(m > 0, new, old).astype(new.dtype)
-    return jax.tree.map(pick, new_tree, old_tree)
+    so every leaf keeps its old value along the leading node axis. (One
+    select definition repo-wide: delegates to ``netsim.tree_select``, the
+    same helper the async staleness buffers use.)"""
+    from repro.netsim import tree_select   # netsim never imports core
+    return tree_select(active, new_tree, old_tree)
 
 
 def node_model(state: FacadeState, i: int):

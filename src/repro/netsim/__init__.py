@@ -30,9 +30,27 @@ Usage — every algorithm composes with every condition::
 masks and reproduces the same training trajectory bit-for-bit (byte
 accounting under netsim counts *actual* surviving directed edges rather
 than the nominal ``n * degree`` upper bound).
+
+netsim v2 adds three axes, all carried on device through the engine's
+scan (presets ``bursty-wan`` / ``core-edge`` / ``async-edge`` /
+``edge-v2``):
+
+* bursty Gilbert–Elliott link loss (``burst=BurstConfig(...)``) — a
+  per-link two-state Markov chain (:class:`ChannelState` in the carry)
+  instead of i.i.d. drop coins;
+* heterogeneous core/edge link tiers (``classes=LinkClasses(...)``) —
+  per-link ``[n, n]`` latency/bandwidth matrices in the timing model;
+* asynchronous stale gossip (``async_gossip=True``) — stragglers serve
+  their last published snapshot (:mod:`.gossip`) instead of stretching
+  the round; ``max_staleness=0`` is bit-identical to the sync path.
 """
-from .conditions import (NetworkConfig, PRESETS, RoundConditions,  # noqa: F401
-                         availability, edge_mask, round_conditions,
-                         straggler_mask)
+from .conditions import (BurstConfig, ChannelState, LinkClasses,  # noqa: F401
+                         NetworkConfig, PRESETS, RoundConditions,
+                         advance_conditions, availability, edge_mask,
+                         init_channel, node_tiers, round_conditions,
+                         step_channel, straggler_mask)
+from .diagnostics import channel_stats  # noqa: F401
 from .events import BurstFailure, Partition, event_masks  # noqa: F401
-from .timing import link_seconds, round_time  # noqa: F401
+from .gossip import (GossipState, apply_async, fold_gossip,  # noqa: F401
+                     init_gossip, stale_mask, tree_select)
+from .timing import link_matrices, link_seconds, round_time  # noqa: F401

@@ -1,4 +1,5 @@
-"""Vectorized network-condition models (churn, message loss, stragglers).
+"""Vectorized network-condition models (churn, message loss, stragglers,
+bursty links, heterogeneous link tiers).
 
 Everything here is jit-friendly: a :class:`NetworkConfig` is static
 (hashable, closed over at trace time) and :func:`round_conditions` maps a
@@ -10,13 +11,26 @@ round functions in ``core/`` consume:
 * ``active [n]``        — 1 where the node is online this round (churn);
 * ``straggler [n]``     — 1 where the node is slow this round. Stragglers
   still train and gossip — in a synchronous round they only stretch the
-  simulated wall-clock time (see :mod:`repro.netsim.timing`).
+  simulated wall-clock time (see :mod:`repro.netsim.timing`); under
+  asynchronous gossip (``async_gossip=True``) they instead serve stale
+  snapshots to their neighbors (see :mod:`repro.netsim.gossip`);
+* ``stale [n]``         — 1 where the node's neighbors observe its stale
+  published snapshot this round (async gossip only; ``None`` otherwise).
 
 Churn is drawn per *outage block* (``round // outage_rounds``) rather than
 per round, so an offline node stays offline for ``outage_rounds``
 consecutive rounds — a join/leave schedule, not per-round coin flips.
 All randomness derives from ``jax.random.fold_in`` on ``(seed, stream,
 round)``, so a given config replays the exact same schedule forever.
+
+Bursty loss (``burst=BurstConfig(...)``) replaces the i.i.d. ``drop_rate``
+coin with a per-link two-state Gilbert–Elliott Markov chain: each
+undirected link is either *good* (loss prob ``drop_good``) or *bad*
+(loss prob ``drop_bad``); per round a good link turns bad with ``p_bad``
+and a bad link recovers with ``p_recover``. The chain state is an
+on-device :class:`ChannelState` carried through the engine's scan (or the
+legacy Python loop) via :func:`init_channel` / :func:`advance_conditions`
+— never synced to the host mid-run.
 """
 from __future__ import annotations
 
@@ -28,7 +42,8 @@ import jax.numpy as jnp
 
 from . import events as events_mod
 
-_DROP, _CHURN, _STRAGGLE = 1, 2, 3   # per-stream fold_in tags
+# per-stream fold_in tags
+_DROP, _CHURN, _STRAGGLE, _BURST, _BURST_INIT, _TIER = 1, 2, 3, 4, 5, 6
 
 
 class RoundConditions(NamedTuple):
@@ -36,6 +51,55 @@ class RoundConditions(NamedTuple):
     edge_mask: Any       # [n, n] symmetric; 1 = message delivered
     active: Any          # [n]    1 = node online
     straggler: Any       # [n]    1 = node slow this round
+    stale: Any = None    # [n]    1 = neighbors see this node's stale
+    #                      snapshot (async gossip); None when sync
+
+
+class ChannelState(NamedTuple):
+    """On-device Gilbert–Elliott state: ``bad [n, n]`` float32 {0, 1},
+    symmetric, zero diagonal — 1 where the undirected link is in its bad
+    (bursty-loss) state. Lives in the engine's scan carry."""
+    bad: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class BurstConfig:
+    """Gilbert–Elliott two-state Markov link loss.
+
+    Per round and per undirected link: a *good* link goes bad with
+    ``p_bad``; a *bad* link recovers with ``p_recover``; messages drop
+    with ``drop_good`` / ``drop_bad`` depending on the current state.
+    Stationary bad fraction is ``p_bad / (p_bad + p_recover)`` and bad
+    bursts last ``1 / p_recover`` rounds in expectation — the two
+    invariants ``tests/test_property.py`` pins.
+    """
+    p_bad: float = 0.05
+    p_recover: float = 0.5
+    drop_good: float = 0.0
+    drop_bad: float = 1.0
+
+    def stationary_bad(self) -> float:
+        return self.p_bad / max(self.p_bad + self.p_recover, 1e-12)
+
+    def stationary_drop(self) -> float:
+        pi = self.stationary_bad()
+        return (1.0 - pi) * self.drop_good + pi * self.drop_bad
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkClasses:
+    """Heterogeneous node tiers: a fast ``core`` and a slow ``edge`` class.
+
+    Node tier assignment is seeded and static per ``(cfg.seed, n)``
+    (:func:`node_tiers`); a link runs at its worse endpoint — pairwise
+    latency is the max, bandwidth the min, of the endpoint class values
+    (:func:`repro.netsim.timing.link_matrices`).
+    """
+    edge_fraction: float = 0.5
+    core_latency_s: float = 1e-3
+    edge_latency_s: float = 8e-2
+    core_bandwidth_bps: float = 1e9
+    edge_bandwidth_bps: float = 2e7
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,6 +124,15 @@ class NetworkConfig:
     seed: int = 0                    # netsim's own stream; independent of
                                      # the experiment seed by construction
     events: tuple = ()               # round-indexed scenario (events.py)
+    burst: "BurstConfig | None" = None     # Gilbert–Elliott bursty loss;
+                                     # None keeps the i.i.d. drop_rate coin
+    classes: "LinkClasses | None" = None   # core/edge link tiers; None keeps
+                                     # the uniform latency_s/bandwidth_bps
+    async_gossip: bool = False       # stragglers serve stale snapshots
+                                     # instead of stretching the round
+    max_staleness: int = 3           # max rounds a straggler may lag before
+                                     # it must publish fresh state; 0 makes
+                                     # async_gossip bit-identical to sync
 
     @classmethod
     def preset(cls, name: str, **overrides) -> "NetworkConfig":
@@ -89,6 +162,38 @@ PRESETS: dict[str, dict] = {
     "hostile": dict(drop_rate=0.25, churn_rate=0.35, outage_rounds=4,
                     straggler_rate=0.30, straggler_slowdown=10.0,
                     latency_s=2e-1, bandwidth_bps=5e6),
+    # --- netsim v2 ---------------------------------------------------------
+    # cross-datacenter gossip whose loss comes in bursts, not i.i.d. coins
+    "bursty-wan": dict(churn_rate=0.02, straggler_rate=0.10,
+                       straggler_slowdown=4.0, latency_s=5e-2,
+                       bandwidth_bps=1e8,
+                       burst=BurstConfig(p_bad=0.15, p_recover=0.5,
+                                         drop_good=0.005, drop_bad=0.9)),
+    # fast datacenter core + slow edge devices: per-link latency/bandwidth
+    "core-edge": dict(drop_rate=0.02, straggler_rate=0.15,
+                      straggler_slowdown=4.0,
+                      classes=LinkClasses(edge_fraction=0.5,
+                                          core_latency_s=1e-3,
+                                          edge_latency_s=8e-2,
+                                          core_bandwidth_bps=1e9,
+                                          edge_bandwidth_bps=2e7)),
+    # flaky edge fleet where stragglers gossip stale updates asynchronously
+    # instead of stretching the synchronous round
+    "async-edge": dict(drop_rate=0.05, churn_rate=0.10, outage_rounds=3,
+                       straggler_rate=0.25, straggler_slowdown=6.0,
+                       latency_s=8e-2, bandwidth_bps=2e7,
+                       async_gossip=True, max_staleness=3),
+    # everything at once: bursty links, core/edge tiers, async stale gossip
+    "edge-v2": dict(churn_rate=0.10, outage_rounds=3, straggler_rate=0.25,
+                    straggler_slowdown=6.0,
+                    burst=BurstConfig(p_bad=0.10, p_recover=0.4,
+                                      drop_good=0.01, drop_bad=0.8),
+                    classes=LinkClasses(edge_fraction=0.5,
+                                        core_latency_s=1e-3,
+                                        edge_latency_s=8e-2,
+                                        core_bandwidth_bps=1e9,
+                                        edge_bandwidth_bps=2e7),
+                    async_gossip=True, max_staleness=3),
 }
 
 
@@ -98,12 +203,67 @@ def _stream(cfg: NetworkConfig, tag: int, rnd):
         jax.random.fold_in(jax.random.PRNGKey(cfg.seed), tag), rnd)
 
 
-def edge_mask(cfg: NetworkConfig, n: int, rnd):
-    """Symmetric {0,1} [n, n]: 1 where the link delivers this round."""
-    u = jax.random.uniform(_stream(cfg, _DROP, rnd), (n, n))
+def _sym_uniform(key, n: int):
+    """One uniform coin per undirected edge, mirrored to [n, n] (diag 0)."""
+    u = jax.random.uniform(key, (n, n))
     upper = jnp.triu(u, 1)
-    u_sym = upper + upper.T                      # one coin per undirected edge
-    return (u_sym >= cfg.drop_rate).astype(jnp.float32)
+    return upper + upper.T
+
+
+# ------------------------------------------------------- bursty channel ---
+def init_channel(cfg: "NetworkConfig | None", n: int):
+    """Initial Gilbert–Elliott state, drawn from the stationary
+    distribution (seeded, so the schedule replays). ``None`` when bursty
+    loss is off — the chain then costs nothing in the carry."""
+    if cfg is None or cfg.burst is None:
+        return None
+    pi = cfg.burst.stationary_bad()
+    u = _sym_uniform(_stream(cfg, _BURST_INIT, 0), n)
+    bad = (u < pi).astype(jnp.float32) * (1.0 - jnp.eye(n))
+    return ChannelState(bad=bad)
+
+
+def step_channel(cfg: "NetworkConfig | None", n: int, rnd, chan):
+    """Advance every link's two-state chain by one round (symmetric: one
+    transition coin per undirected edge)."""
+    if cfg is None or cfg.burst is None:
+        return None
+    if chan is None:
+        chan = init_channel(cfg, n)
+    u = _sym_uniform(_stream(cfg, _BURST, rnd), n)
+    stay_bad = u < (1.0 - cfg.burst.p_recover)
+    go_bad = u < cfg.burst.p_bad
+    bad = jnp.where(chan.bad > 0, stay_bad, go_bad).astype(jnp.float32)
+    return ChannelState(bad=bad * (1.0 - jnp.eye(n)))
+
+
+# ------------------------------------------------------------ link tiers --
+def node_tiers(cfg: NetworkConfig, n: int):
+    """{0=core, 1=edge} int32 [n]; seeded, static per ``(cfg.seed, n)``.
+    All-core when ``cfg.classes`` is None."""
+    if cfg.classes is None:
+        return jnp.zeros((n,), jnp.int32)
+    u = jax.random.uniform(_stream(cfg, _TIER, 0), (n,))
+    return (u < cfg.classes.edge_fraction).astype(jnp.int32)
+
+
+def edge_mask(cfg: NetworkConfig, n: int, rnd, chan=None):
+    """Symmetric {0,1} [n, n]: 1 where the link delivers this round.
+
+    Without ``cfg.burst`` this is the historical i.i.d. ``drop_rate`` coin
+    (bit-for-bit). With burst, the per-link drop probability follows the
+    Gilbert–Elliott state in ``chan``.
+    """
+    u_sym = _sym_uniform(_stream(cfg, _DROP, rnd), n)
+    if cfg.burst is None:
+        return (u_sym >= cfg.drop_rate).astype(jnp.float32)
+    if chan is None:
+        raise ValueError(
+            "bursty loss needs the carried channel state: use "
+            "init_channel(cfg, n) + advance_conditions(cfg, n, rnd, chan) "
+            "instead of calling round_conditions/edge_mask statelessly")
+    drop = jnp.where(chan.bad > 0, cfg.burst.drop_bad, cfg.burst.drop_good)
+    return (u_sym >= drop).astype(jnp.float32)
 
 
 def availability(cfg: NetworkConfig, n: int, rnd):
@@ -119,13 +279,26 @@ def straggler_mask(cfg: NetworkConfig, n: int, rnd):
     return (u < cfg.straggler_rate).astype(jnp.float32)
 
 
-def round_conditions(cfg: NetworkConfig, n: int, rnd) -> RoundConditions:
+def round_conditions(cfg: NetworkConfig, n: int, rnd,
+                     chan=None) -> RoundConditions:
     """All masks for round ``rnd`` (deterministic in (cfg.seed, rnd));
-    composes the stochastic models with the scheduled events."""
-    edges = edge_mask(cfg, n, rnd)
+    composes the stochastic models with the scheduled events. ``chan`` is
+    the carried :class:`ChannelState`, required iff ``cfg.burst`` is set."""
+    edges = edge_mask(cfg, n, rnd, chan)
     active = availability(cfg, n, rnd)
     strag = straggler_mask(cfg, n, rnd)
     ev_active, ev_edges = events_mod.event_masks(cfg.seed, cfg.events, n, rnd)
     return RoundConditions(edge_mask=edges * ev_edges,
                            active=active * ev_active,
                            straggler=strag)
+
+
+def advance_conditions(cfg: NetworkConfig, n: int, rnd, chan=None):
+    """Step the bursty channel into round ``rnd`` and draw its masks:
+    ``(RoundConditions, new ChannelState-or-None)``. This is THE per-round
+    entry point for both drivers — the scan engine calls it inside
+    ``lax.scan`` with the channel state in the donated carry; the legacy
+    loop threads the same state through Python. Bit-identical to
+    :func:`round_conditions` when ``cfg.burst`` is None."""
+    chan = step_channel(cfg, n, rnd, chan)
+    return round_conditions(cfg, n, rnd, chan), chan

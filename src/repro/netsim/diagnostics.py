@@ -1,0 +1,64 @@
+"""Empirical diagnostics over the simulated network models.
+
+The Gilbert–Elliott channel and the tiered link matrices make claims
+(stationary loss rate, mean burst length, worst-endpoint link classes)
+that tests and benchmark smokes want to check against *measured*
+behavior. This module rolls the actual engine code path — one
+``lax.scan`` over :func:`repro.netsim.advance_conditions` — and reduces
+it to host-side statistics. Used by ``tests/test_property.py``
+(hypothesis sweeps), ``tests/test_netsim.py`` (fixed-seed spot checks)
+and the dry-run netsim-v2 smoke.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import conditions as conditions_mod
+
+
+def channel_stats(cfg, n: int, rounds: int) -> dict:
+    """Roll the bursty channel for ``rounds`` rounds and measure it.
+
+    Returns a dict with the empirical per-link ``bad_rate`` and
+    ``loss_rate``, the ``mean_burst_len`` over completed bad bursts
+    (NaN when no burst completed), ``n_bursts``, and the structural
+    flags ``symmetric`` / ``binary`` over every round's edge mask.
+    One device->host transfer; the scan is the engine's exact path.
+    """
+    chan0 = conditions_mod.init_channel(cfg, n)
+
+    def step(chan, rnd):
+        conds, chan = conditions_mod.advance_conditions(cfg, n, rnd, chan)
+        bad = (chan.bad if chan is not None
+               else jnp.zeros((n, n), jnp.float32))
+        return chan, (bad, conds.edge_mask)
+
+    _, (bads, masks) = jax.lax.scan(step, chan0,
+                                    jnp.arange(rounds, dtype=jnp.int32))
+    bads, masks = np.asarray(bads), np.asarray(masks)
+
+    iu = np.triu_indices(n, 1)
+    bad_seq = bads[:, iu[0], iu[1]]                    # [rounds, links]
+    lost_seq = 1.0 - masks[:, iu[0], iu[1]]
+
+    lengths = []
+    for link in bad_seq.T:
+        run = 0
+        for b in link:
+            if b > 0:
+                run += 1
+            elif run:
+                lengths.append(run)
+                run = 0
+    return {
+        "bad_rate": float(bad_seq.mean()),
+        "loss_rate": float(lost_seq.mean()),
+        "mean_burst_len": float(np.mean(lengths)) if lengths else float("nan"),
+        "n_bursts": len(lengths),
+        "symmetric": bool((masks == np.swapaxes(masks, 1, 2)).all()
+                          and (bads == np.swapaxes(bads, 1, 2)).all()),
+        "binary": bool(set(np.unique(masks)) <= {0.0, 1.0}
+                       and set(np.unique(bads)) <= {0.0, 1.0}),
+    }

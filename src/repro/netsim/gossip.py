@@ -1,0 +1,92 @@
+"""Asynchronous stale gossip: stragglers serve snapshots, not stalls.
+
+The synchronous model makes every straggler stretch the round: the whole
+fleet waits for the slowest node. Real asynchronous gossip does the
+opposite — a slow node keeps computing in the background while its
+neighbors reuse the last model it *published*. This module is the state
+machine behind that mode (``NetworkConfig(async_gossip=True)``):
+
+* :class:`GossipState` — the staleness buffer carried through the
+  engine's ``lax.scan`` (or the legacy Python loop): ``published`` holds
+  every node's last finished mixable state (params for the baselines;
+  cores/heads/cluster-id for FACADE) and ``age[n]`` counts rounds since
+  each node last published. Both live on device; no host syncs.
+* Per round, a straggling node *stays stale* while ``age + 1 <=
+  cfg.max_staleness``: its neighbors mix against ``published`` (see
+  ``bindings.gossip_mix``), it sends no fresh bytes, and it does not gate
+  the simulated round time. Once the cap is hit it must catch up — it
+  publishes fresh state and gates the round like a synchronous straggler.
+* ``max_staleness=0`` therefore forces every node fresh every round:
+  the async path is bit-for-bit the synchronous path (mixing, bytes AND
+  simulated seconds) — the parity contract ``tests/test_netsim.py`` and
+  ``tests/test_engine.py`` pin for all five algorithms.
+
+The node's own training is never stale: a straggler keeps advancing its
+local state (background compute); only what its neighbors observe lags.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class GossipState(NamedTuple):
+    """Staleness buffer, one entry per node (leading ``n`` axis)."""
+    published: Any       # pytree: each node's last published mixable state
+    age: Any             # [n] int32: rounds since the node last published
+
+
+def tree_select(mask, when_on, when_off):
+    """Per-node select along the leading axis: ``mask[i] > 0`` picks
+    ``when_on``'s node-i leaves, else ``when_off``'s. Shared by the
+    staleness machinery and ``netwire.stale_view``."""
+    def pick(a, b):
+        m = mask.reshape((mask.shape[0],) + (1,) * (a.ndim - 1))
+        return jnp.where(m > 0, a, b).astype(a.dtype)
+    return jax.tree.map(pick, when_on, when_off)
+
+
+def init_gossip(cfg, n: int, mixable):
+    """Fresh buffer from the run's initial state (``None`` when async
+    gossip is off). ``mixable`` is copied leaf-for-leaf so the buffer
+    never aliases the (donated) training state."""
+    if cfg is None or not cfg.async_gossip:
+        return None
+    published = jax.tree.map(jnp.copy, mixable)
+    return GossipState(published=published,
+                       age=jnp.zeros((n,), jnp.int32))
+
+
+def stale_mask(cfg, conds, gossip):
+    """{0,1} [n]: 1 where the node stays stale this round — it is a
+    straggler AND its snapshot would still be within ``max_staleness``."""
+    within = (gossip.age + 1 <= cfg.max_staleness)
+    return (conds.straggler * within).astype(jnp.float32)
+
+
+def apply_async(cfg, conds, gossip):
+    """Pre-round hook for both drivers: returns ``(conds', published)``.
+
+    With async gossip on, ``conds'`` carries the round's ``stale`` mask
+    and ``published`` is the buffer tree to hand the round function
+    (``gossip=`` kwarg). Otherwise the conditions pass through untouched
+    and ``published`` is None — the synchronous code path.
+    """
+    if cfg is None or gossip is None or not cfg.async_gossip:
+        return conds, None
+    return (conds._replace(stale=stale_mask(cfg, conds, gossip)),
+            gossip.published)
+
+
+def fold_gossip(cfg, gossip, conds, new_mixable):
+    """Post-round hook: nodes that stayed stale keep their old snapshot
+    and age by one; everyone else publishes the round's fresh mixable
+    state and resets to age 0."""
+    if gossip is None:
+        return None
+    stay = conds.stale
+    published = tree_select(stay, gossip.published, new_mixable)
+    age = jnp.where(stay > 0, gossip.age + 1, 0).astype(jnp.int32)
+    return GossipState(published=published, age=age)

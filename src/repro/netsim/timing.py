@@ -6,10 +6,20 @@ Stragglers multiply their compute AND any link touching them (a slow
 uploader delays the receiver too). The result feeds ``CommLog``'s time
 axis so benchmarks can report "simulated hours to target accuracy", the
 companion to the paper's Fig. 7 "GB to target accuracy".
+
+With heterogeneous link classes (``cfg.classes``), the per-link base time
+comes from ``[n, n]`` latency/bandwidth matrices (:func:`link_matrices`)
+instead of the uniform scalars: a link runs at its worse endpoint — max
+latency, min bandwidth. Under asynchronous gossip, stale nodes do not
+gate the round (their compute overlaps the next rounds); the caller
+expresses that by zeroing their entry in ``active`` (see
+``netwire.round_seconds``).
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
+
+from . import conditions as conditions_mod
 
 
 def link_seconds(cfg, payload_bytes):
@@ -18,12 +28,25 @@ def link_seconds(cfg, payload_bytes):
     return cfg.latency_s + 8.0 * payload_bytes / cfg.bandwidth_bps
 
 
+def link_matrices(cfg, n: int):
+    """Per-link ``(latency [n, n], bandwidth [n, n])`` from the node tier
+    assignment — symmetric, each link at its worse endpoint's class.
+    Requires ``cfg.classes``; the scalar path never builds matrices."""
+    cl = cfg.classes
+    tiers = conditions_mod.node_tiers(cfg, n)
+    lat = jnp.where(tiers > 0, cl.edge_latency_s, cl.core_latency_s)
+    bw = jnp.where(tiers > 0, cl.edge_bandwidth_bps, cl.core_bandwidth_bps)
+    return (jnp.maximum(lat[:, None], lat[None, :]),
+            jnp.minimum(bw[:, None], bw[None, :]))
+
+
 def round_time(cfg, adj_eff, payload_bytes, active, straggler,
                local_steps: int):
     """Simulated wall-clock seconds for one synchronous round.
 
     adj_eff  [n, n]: effective (post-churn/post-drop) adjacency;
-    active    [n]:   {0,1} online mask (offline nodes don't gate the round);
+    active    [n]:   {0,1} gate mask (offline — and, under async gossip,
+                     stale — nodes don't gate the round);
     straggler [n]:   {0,1} mask from this round's conditions.
     An empty round (everyone churned out) costs 0 seconds.
     """
@@ -31,7 +54,11 @@ def round_time(cfg, adj_eff, payload_bytes, active, straggler,
     active = jnp.asarray(active, jnp.float32)
     straggler = jnp.asarray(straggler, jnp.float32)
     slow = 1.0 + (cfg.straggler_slowdown - 1.0) * straggler        # [n]
-    base_link = link_seconds(cfg, payload_bytes)
+    if cfg.classes is None:
+        base_link = link_seconds(cfg, payload_bytes)               # scalar
+    else:
+        lat, bw = link_matrices(cfg, adj_eff.shape[0])
+        base_link = lat + 8.0 * payload_bytes / bw                 # [n, n]
     # link (i, j) runs at the slower endpoint's pace; links run in parallel
     pair_slow = jnp.maximum(slow[:, None], slow[None, :])          # [n, n]
     comm = (adj_eff * pair_slow * base_link).max(axis=1)           # [n]

@@ -1,5 +1,33 @@
-"""Shared fixtures. NOTE: no XLA_FLAGS here — tests must see 1 CPU device
-(the 512-device mesh is exclusively the dry-run's business)."""
+"""Shared fixtures, capability gates, and the failure-set diff helper.
+
+NOTE: no XLA_FLAGS here — tests must see 1 CPU device (the 512-device
+mesh is exclusively the dry-run's business).
+
+Capability gates
+----------------
+Some suites exercise APIs this box's jax build may not have: the Pallas
+kernels target the post-0.4 ``pallas.tpu.CompilerParams`` surface (and
+need interpret-mode lowering to run on CPU), and the dry-run/hooks mesh
+tests need ``jax.set_mesh`` / ``jax.sharding.get_abstract_mesh``. Rather
+than fail on such boxes, the affected tests skip with an explicit reason
+via the ``requires_*`` markers below — where the capability exists they
+run exactly as before (kernels in interpret mode).
+
+Failure-set baseline tooling
+----------------------------
+"Tests no worse than seed" is a statement about failure SETS, not exit
+codes. Two options make that mechanically checkable::
+
+    pytest -q --write-failures=results/failures.txt   # record the set
+    pytest -q --diff-baseline=results/failures.txt    # exit 0 iff no NEW
+                                                      # failures vs the file
+
+``--diff-baseline`` prints newly-failing and newly-fixed node ids and
+rewrites the session exit status: green iff the current failure set is a
+subset of the baseline.
+"""
+import pathlib
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -15,6 +43,106 @@ ALL_ARCHS = [
 ]
 
 
+# ---------------------------------------------------------- capabilities --
+def _pallas_interpret_reason():
+    """None when the repo's Pallas kernels can run here (interpret mode on
+    CPU), else a skip reason. Probes both the lowering and the
+    ``pallas.tpu`` API surface the kernels are written against."""
+    try:
+        import jax.experimental.pallas as pl
+        from jax.experimental.pallas import tpu as pltpu
+    except Exception as e:  # pragma: no cover - import is fine on this box
+        return f"jax.experimental.pallas unavailable: {e!r}"
+    if not hasattr(pltpu, "CompilerParams"):
+        return ("jax.experimental.pallas.tpu.CompilerParams missing "
+                f"(jax {jax.__version__} predates the rename; kernels "
+                "target the renamed API)")
+    try:
+        def _copy(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        x = jnp.zeros((8, 128), jnp.float32)
+        pl.pallas_call(
+            _copy, out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+            interpret=True)(x)
+    except Exception as e:
+        return f"Pallas interpret-mode lowering unavailable here: {e!r}"
+    return None
+
+
+PALLAS_SKIP_REASON = _pallas_interpret_reason()
+
+requires_pallas = pytest.mark.skipif(
+    PALLAS_SKIP_REASON is not None,
+    reason=PALLAS_SKIP_REASON or "pallas available")
+
+requires_set_mesh = pytest.mark.skipif(
+    not hasattr(jax, "set_mesh"),
+    reason=f"jax.set_mesh unavailable (jax {jax.__version__})")
+
+requires_abstract_mesh = pytest.mark.skipif(
+    not hasattr(jax.sharding, "get_abstract_mesh"),
+    reason=("jax.sharding.get_abstract_mesh unavailable "
+            f"(jax {jax.__version__})"))
+
+
+# ------------------------------------------------- failure-set baseline ---
+_FAILED: set = set()
+
+
+def pytest_addoption(parser):
+    g = parser.getgroup("baseline", "failure-set baseline tooling")
+    g.addoption("--write-failures", metavar="PATH", default=None,
+                help="write the run's failure set (one test id per line)")
+    g.addoption("--diff-baseline", metavar="PATH", default=None,
+                help="diff the failure set against a baseline file; the "
+                     "session exits 0 iff there are no NEW failures")
+
+
+def pytest_runtest_logreport(report):
+    if report.failed:
+        _FAILED.add(report.nodeid)
+
+
+def _read_baseline(path) -> set:
+    p = pathlib.Path(path)
+    if not p.exists():
+        return set()
+    return {ln.strip() for ln in p.read_text().splitlines() if ln.strip()}
+
+
+def pytest_terminal_summary(terminalreporter, exitstatus, config):
+    bp = config.getoption("--diff-baseline")
+    if not bp:
+        return
+    baseline = _read_baseline(bp)
+    new = sorted(_FAILED - baseline)
+    fixed = sorted(baseline - _FAILED)
+    tr = terminalreporter
+    tr.section("failure-set diff vs baseline")
+    tr.write_line(f"baseline: {len(baseline)} failing, "
+                  f"current: {len(_FAILED)} failing")
+    for nid in new:
+        tr.write_line(f"NEW     {nid}")
+    for nid in fixed:
+        tr.write_line(f"FIXED   {nid}")
+    tr.write_line("no worse than baseline" if not new
+                  else f"{len(new)} NEW failure(s)")
+
+
+def pytest_sessionfinish(session, exitstatus):
+    wp = session.config.getoption("--write-failures")
+    if wp:
+        p = pathlib.Path(wp)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text("".join(f"{nid}\n" for nid in sorted(_FAILED)))
+    bp = session.config.getoption("--diff-baseline")
+    if bp and session.exitstatus in (0, 1):
+        baseline = _read_baseline(bp)
+        session.exitstatus = 1 if (_FAILED - baseline) else 0
+
+
+# ------------------------------------------------------------- fixtures ---
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

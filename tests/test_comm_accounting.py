@@ -4,6 +4,8 @@ import pytest
 
 from repro.comm.accounting import CommLog, gb
 
+pytestmark = pytest.mark.tier0
+
 
 def test_backfilled_rounds_never_cross_target():
     log = CommLog()

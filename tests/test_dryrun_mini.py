@@ -1,5 +1,6 @@
 """Dry-run machinery on a miniature mesh, in a subprocess (so the forced
-device count never leaks into other tests)."""
+device count never leaks into other tests). Version-gated: skips when
+this jax build lacks ``jax.set_mesh`` (the subprocess script needs it)."""
 import json
 import os
 import subprocess
@@ -7,6 +8,10 @@ import sys
 import textwrap
 
 import pytest
+
+from conftest import requires_set_mesh
+
+pytestmark = requires_set_mesh
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 

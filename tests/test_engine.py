@@ -45,12 +45,16 @@ def _assert_runs_identical(ref, eng):
 
 
 # ------------------------------------------------------------- parity ----
-@pytest.mark.parametrize("netname", [None, "edge-churn"],
-                         ids=["ideal", "edge-churn"])
+@pytest.mark.parametrize("netname", [None, "edge-churn", "edge-v2"],
+                         ids=["ideal", "edge-churn", "edge-v2"])
 @pytest.mark.parametrize("algo", ALGOS)
 def test_engine_matches_legacy_bitforbit(algo, netname, tiny_ds):
     """rounds=5, eval_every=2 exercises full spans AND a trailing partial
-    segment; edge-churn exercises in-scan conditions + the timing model."""
+    segment; edge-churn exercises in-scan conditions + the timing model;
+    edge-v2 exercises all three netsim-v2 axes at once — the bursty
+    channel state and async staleness buffers carried through the scan
+    (vs threaded through the legacy Python loop) plus the heterogeneous
+    link matrices in the in-scan timing feed."""
     kw = dict(rounds=5, k=2, degree=2, local_steps=2, batch_size=4,
               lr=0.05, eval_every=2, seed=0,
               net=NetworkConfig.preset(netname) if netname else None)

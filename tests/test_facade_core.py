@@ -7,9 +7,11 @@ import pytest
 
 from repro.core import facade as facade_mod
 from repro.core import split, topology
-from repro.core.bindings import make_binding
+from repro.core.bindings import gossip_mix, make_binding
 from repro.core.state import init_facade_state
 from repro.configs.facade_paper import lenet
+
+pytestmark = pytest.mark.tier0
 
 
 # --------------------------------------------------------------------------
@@ -87,7 +89,7 @@ def test_core_mixing_matches_naive_loop():
     adj = np.asarray(topology.random_regular(key, n, 2), np.float32)
     w = np.asarray(topology.mixing_matrix(jnp.asarray(adj)))
     cores = np.asarray(jax.random.normal(key, (n, d)))
-    got = np.asarray(facade_mod._mix_cores(
+    got = np.asarray(gossip_mix(
         jnp.asarray(w), {"p": jnp.asarray(cores)})["p"])
     want = w @ cores
     np.testing.assert_allclose(got, want, rtol=1e-5)

@@ -1,5 +1,12 @@
 """repro.netsim: condition masks, timing model, event schedules, and the
-netsim path through facade/baseline rounds (ideal == bit-for-bit legacy)."""
+netsim path through facade/baseline rounds (ideal == bit-for-bit legacy).
+
+netsim v2: Gilbert–Elliott bursty links (carried channel state),
+heterogeneous core/edge link matrices, and async stale gossip — including
+the zero-staleness parity contract (async with ``max_staleness=0`` is
+bit-for-bit the synchronous path for all five algorithms)."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -16,10 +23,14 @@ from repro.core.runner import run_experiment
 from repro.core.state import init_baseline_state, init_facade_state
 from repro.data.synthetic import SynthSpec, make_clustered_data
 from repro import netsim
-from repro.netsim import (BurstFailure, NetworkConfig, Partition,
-                          RoundConditions, round_conditions)
+from repro.netsim import (BurstConfig, BurstFailure, LinkClasses,
+                          NetworkConfig, Partition, RoundConditions,
+                          round_conditions)
+
+pytestmark = pytest.mark.tier0
 
 N, K, H, B = 4, 2, 2, 4
+ALL_ALGOS = ("facade", "el", "dpsgd", "deprl", "dac")
 
 
 def _ones_conditions(n):
@@ -41,7 +52,8 @@ def setup():
 
 # ----------------------------------------------------------- conditions --
 def test_presets_exist_and_ideal_is_clean():
-    for name in ("ideal", "lan", "wan", "edge-churn", "hostile"):
+    for name in ("ideal", "lan", "wan", "edge-churn", "hostile",
+                 "bursty-wan", "core-edge", "async-edge", "edge-v2"):
         NetworkConfig.preset(name)
     ideal = NetworkConfig.preset("ideal")
     c = round_conditions(ideal, 8, 0)
@@ -181,6 +193,179 @@ def test_event_schedule_deterministic_and_windowed():
     assert (e4 * (1 - np.eye(n))).sum() < n * (n - 1)
     assert float(np.asarray(round_conditions(net, n, 6).edge_mask)
                  [np.triu_indices(n, 1)].sum()) == n * (n - 1) / 2
+
+
+# -------------------------------------------------- bursty channel (v2) --
+def test_burst_channel_deterministic_symmetric_binary():
+    """The carried Gilbert–Elliott chain replays under a fixed seed and
+    keeps masks symmetric {0,1}; fixed-parameter twins of the hypothesis
+    properties (stationary loss rate, mean burst length ~ 1/p_recover)."""
+    burst = BurstConfig(p_bad=0.2, p_recover=0.5, drop_good=0.0,
+                        drop_bad=1.0)
+    net = NetworkConfig(name="ge", seed=11, burst=burst)
+    n = 8
+    chan = netsim.init_channel(net, n)
+    chan_b = netsim.init_channel(net, n)
+    for rnd in range(4):
+        a, chan = netsim.advance_conditions(net, n, rnd, chan)
+        b, chan_b = netsim.advance_conditions(net, n, rnd, chan_b)
+        em = np.asarray(a.edge_mask)
+        np.testing.assert_array_equal(em, np.asarray(b.edge_mask))
+        np.testing.assert_array_equal(np.asarray(chan.bad),
+                                      np.asarray(chan_b.bad))
+        np.testing.assert_array_equal(em, em.T)
+        assert set(np.unique(em)) <= {0.0, 1.0}
+        assert np.all(np.diag(np.asarray(chan.bad)) == 0)
+
+    stats = netsim.channel_stats(net, n=6, rounds=600)
+    assert stats["symmetric"] and stats["binary"]
+    assert abs(stats["bad_rate"] - burst.stationary_bad()) < 0.08
+    assert abs(stats["loss_rate"] - burst.stationary_drop()) < 0.08
+    assert abs(stats["mean_burst_len"] - 2.0) < 0.5      # 1/p_recover
+
+    # stateless edge_mask calls on a bursty config must fail loudly, not
+    # silently fall back to i.i.d. loss
+    with pytest.raises(ValueError, match="channel state"):
+        round_conditions(net, n, 0)
+
+
+def test_burst_none_is_iid_path_bitforbit():
+    """Without ``burst`` the v2 code path must reproduce the historical
+    i.i.d. drop coins exactly (same stream, same comparison)."""
+    net = NetworkConfig.preset("edge-churn", seed=3)
+    for rnd in (0, 5):
+        legacy = round_conditions(net, 10, rnd)
+        conds, chan = netsim.advance_conditions(net, 10, rnd, None)
+        assert chan is None
+        for a, b in zip(legacy, conds):
+            if a is not None:
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------- link matrices (v2) ----
+def test_link_matrices_symmetric_and_class_consistent():
+    net = NetworkConfig.preset("core-edge", seed=5)
+    n = 12
+    tiers = np.asarray(netsim.node_tiers(net, n))
+    assert set(np.unique(tiers)) <= {0, 1}
+    lat, bw = (np.asarray(m) for m in netsim.link_matrices(net, n))
+    np.testing.assert_array_equal(lat, lat.T)
+    np.testing.assert_array_equal(bw, bw.T)
+    cl = net.classes
+    lat_of = np.where(tiers > 0, cl.edge_latency_s, cl.core_latency_s)
+    bw_of = np.where(tiers > 0, cl.edge_bandwidth_bps, cl.core_bandwidth_bps)
+    np.testing.assert_allclose(
+        lat, np.maximum(lat_of[:, None], lat_of[None, :]), rtol=1e-6)
+    np.testing.assert_allclose(
+        bw, np.minimum(bw_of[:, None], bw_of[None, :]), rtol=1e-6)
+
+
+def test_hetero_round_time_slower_than_all_core():
+    """A fleet with slow edge links must take at least as long as the same
+    round on all-core links, and the scalar path must be untouched by an
+    all-core class config with matching values."""
+    n = 8
+    adj = topology.ring(n, 2)
+    active, none_slow = jnp.ones((n,)), jnp.zeros((n,))
+    base = NetworkConfig.preset("core-edge", seed=1)
+    all_core = dataclasses.replace(
+        base, classes=dataclasses.replace(base.classes, edge_fraction=0.0))
+    t_het = float(netsim.round_time(base, adj, 1e6, active, none_slow, 10))
+    t_core = float(netsim.round_time(all_core, adj, 1e6, active, none_slow,
+                                     10))
+    assert t_het >= t_core > 0
+    # every edge-fraction draw at seed=1 puts >= 1 node in the edge tier
+    assert np.asarray(netsim.node_tiers(base, n)).sum() >= 1
+    assert t_het > t_core
+
+
+# ------------------------------------------------- async staleness (v2) --
+def test_round_seconds_excludes_stale_nodes():
+    """A stale straggler must not gate the simulated round; a catch-up
+    straggler (stale=0) must."""
+    net = NetworkConfig.preset("lan")
+    n = 4
+    adj = jnp.asarray(topology.ring(n, 2))
+    info = {"adj_eff": adj, "payload_bytes": jnp.float32(1e6)}
+    strag = jnp.zeros((n,)).at[0].set(1.0)
+    conds = RoundConditions(edge_mask=jnp.ones((n, n)),
+                            active=jnp.ones((n,)), straggler=strag,
+                            stale=jnp.zeros((n,)))
+    from repro.core import netwire
+    t_gate = float(netwire.round_seconds(net, info, conds, 10))
+    conds_stale = conds._replace(stale=strag)
+    t_free = float(netwire.round_seconds(net, info, conds_stale, 10))
+    assert t_gate > t_free > 0
+    # with nobody straggling, the stale mask is a no-op
+    conds_none = conds._replace(straggler=jnp.zeros((n,)))
+    t0 = float(netwire.round_seconds(net, info, conds_none, 10))
+    assert t_free == t0
+
+
+def test_comm_info_counts_no_bytes_for_stale_senders():
+    from repro.core import netwire
+    n = 4
+    adj = jnp.ones((n, n)) - jnp.eye(n)
+    conds = RoundConditions(edge_mask=jnp.ones((n, n)),
+                            active=jnp.ones((n,)),
+                            straggler=jnp.zeros((n,)),
+                            stale=jnp.asarray([1.0, 0.0, 0.0, 0.0]))
+    info = netwire.comm_info(conds, adj, 100.0, n * 2)
+    # node 0's (n-1) outgoing messages carry no fresh bytes
+    assert float(info["round_bytes"]) == (n * (n - 1) - (n - 1)) * 100.0
+    sync = conds._replace(stale=None)
+    assert float(netwire.comm_info(sync, adj, 100.0, 0)["round_bytes"]) \
+        == n * (n - 1) * 100.0
+
+
+@pytest.mark.parametrize("algo", ALL_ALGOS)
+def test_async_zero_staleness_is_sync_bitforbit(algo, tiny_ds, setup):
+    """THE async parity contract: ``async_gossip=True, max_staleness=0``
+    forces every node fresh every round, so trajectories, bytes AND
+    simulated seconds reproduce the synchronous path bit for bit."""
+    cfg, _, _ = setup
+    kw = dict(rounds=3, k=2, degree=2, local_steps=2, batch_size=4, lr=0.05,
+              eval_every=1, seed=0)
+    base = NetworkConfig.preset("edge-churn")
+    async0 = dataclasses.replace(base, async_gossip=True, max_staleness=0)
+    ref = run_experiment(algo, cfg, tiny_ds, net=base, **kw)
+    got = run_experiment(algo, cfg, tiny_ds, net=async0, **kw)
+    assert ref.acc_per_cluster == got.acc_per_cluster
+    assert ref.fair_acc == got.fair_acc
+    assert ref.comm.bytes == got.comm.bytes
+    assert ref.comm.seconds == got.comm.seconds
+    for (r1, c1), (r2, c2) in zip(ref.cluster_history, got.cluster_history):
+        assert r1 == r2
+        np.testing.assert_array_equal(c1, c2)
+
+
+def test_async_staleness_changes_bytes_and_time(tiny_ds, setup):
+    """With real staleness allowed, stale stragglers send no fresh bytes
+    and stop gating the round — both axes must move vs the sync run."""
+    cfg, _, _ = setup
+    kw = dict(rounds=4, k=2, degree=2, local_steps=2, batch_size=4, lr=0.05,
+              eval_every=2, seed=0)
+    net = NetworkConfig.preset("async-edge")
+    sync = dataclasses.replace(net, async_gossip=False)
+    r_async = run_experiment("el", cfg, tiny_ds, net=net, **kw)
+    r_sync = run_experiment("el", cfg, tiny_ds, net=sync, **kw)
+    assert r_async.comm.bytes[-1] < r_sync.comm.bytes[-1]
+    assert r_async.comm.seconds[-1] < r_sync.comm.seconds[-1]
+    assert all(np.isfinite(a) for a in r_async.final_acc)
+
+
+def test_run_experiment_all_algos_under_v2_presets(tiny_ds, setup):
+    cfg, _, _ = setup
+    for preset in ("bursty-wan", "core-edge", "edge-v2"):
+        for algo in ("facade", "el"):
+            res = run_experiment(algo, cfg, tiny_ds, rounds=2, k=2, degree=2,
+                                 local_steps=2, batch_size=4, lr=0.05,
+                                 eval_every=1, seed=0,
+                                 net=NetworkConfig.preset(preset))
+            assert len(res.comm.seconds) == 2
+            assert np.isfinite(res.comm.seconds[-1])
+            assert res.comm.bytes[-1] >= 0
+            assert all(np.isfinite(a) for a in res.final_acc)
 
 
 # ---------------------------------------------------------------- timing --

@@ -9,17 +9,21 @@ import pytest
 pytest.importorskip("hypothesis", reason="hypothesis not installed")
 from hypothesis import given, settings, strategies as st
 
+from repro import netsim
 from repro.core import split, topology
 from repro.core.cache import EngineSpec
 from repro.core.engine import segment_plan
 from repro.fairness.metrics import (demographic_parity, equalized_odds,
                                     fair_accuracy)
 from repro.models.base import CNNConfig
-from repro.netsim import NetworkConfig
+from repro.netsim import (BurstConfig, BurstFailure, LinkClasses,
+                          NetworkConfig)
 from repro.models import transformer
 from repro.models.attention import chunked_sdpa, sdpa
 from repro.roofline.analysis import (collective_bytes_from_hlo,
                                      parse_shape_list)
+
+pytestmark = pytest.mark.tier0
 
 _settings = settings(max_examples=25, deadline=None)
 
@@ -155,6 +159,58 @@ def test_segment_plan_properties(rounds, eval_every, warmup):
         assert not (s.start < warmup < s.start + s.length)
 
 
+# --------------------------------------------------------------------------
+@settings(max_examples=8, deadline=None)
+@given(p_bad=st.floats(0.10, 0.50), p_recover=st.floats(0.30, 0.90),
+       seed=st.integers(0, 99))
+def test_gilbert_elliott_stationary_and_burst_length(p_bad, p_recover, seed):
+    """The two invariants the burst model's realism rests on: the empirical
+    per-link loss rate converges to the chain's stationary rate, and bad
+    bursts last ~1/p_recover rounds in expectation. Masks stay symmetric
+    {0,1} throughout. (``netsim.channel_stats`` rolls the engine's exact
+    advance_conditions scan.)"""
+    burst = BurstConfig(p_bad=p_bad, p_recover=p_recover,
+                        drop_good=0.0, drop_bad=1.0)
+    cfg = NetworkConfig(name="ge", seed=seed, burst=burst)
+    stats = netsim.channel_stats(cfg, n=6, rounds=600)
+
+    assert stats["symmetric"] and stats["binary"]
+    # empirical loss rate ~ stationary rate (drop_bad=1 => loss == bad)
+    assert abs(stats["bad_rate"] - burst.stationary_bad()) < 0.10
+    assert abs(stats["loss_rate"] - burst.stationary_drop()) < 0.10
+    # mean completed-burst length ~ 1/p_recover
+    assert stats["n_bursts"] > 20               # enough bursts to average
+    want = 1.0 / p_recover
+    assert abs(stats["mean_burst_len"] - want) < max(0.4, 0.35 * want)
+
+
+@_settings
+@given(edge_fraction=st.floats(0.0, 1.0), n=st.integers(2, 24),
+       seed=st.integers(0, 99),
+       lat=st.tuples(st.floats(1e-4, 1e-1), st.floats(1e-4, 1e-1)),
+       bw=st.tuples(st.floats(1e6, 1e9), st.floats(1e6, 1e9)))
+def test_link_matrix_construction(edge_fraction, n, seed, lat, bw):
+    """Tiered link matrices: symmetric, and every entry is exactly the
+    worse endpoint's class value (max latency, min bandwidth)."""
+    classes = LinkClasses(edge_fraction=edge_fraction,
+                          core_latency_s=lat[0], edge_latency_s=lat[1],
+                          core_bandwidth_bps=bw[0], edge_bandwidth_bps=bw[1])
+    cfg = NetworkConfig(name="tiers", seed=seed, classes=classes)
+    tiers = np.asarray(netsim.node_tiers(cfg, n))
+    assert set(np.unique(tiers)) <= {0, 1}
+    lat_m, bw_m = (np.asarray(m) for m in netsim.link_matrices(cfg, n))
+    np.testing.assert_array_equal(lat_m, lat_m.T)
+    np.testing.assert_array_equal(bw_m, bw_m.T)
+    lat_of = np.where(tiers > 0, lat[1], lat[0]).astype(np.float32)
+    bw_of = np.where(tiers > 0, bw[1], bw[0]).astype(np.float32)
+    np.testing.assert_allclose(
+        lat_m, np.maximum(lat_of[:, None], lat_of[None, :]), rtol=1e-6)
+    np.testing.assert_allclose(
+        bw_m, np.minimum(bw_of[:, None], bw_of[None, :]), rtol=1e-6)
+    # the assignment is static: same (seed, n) -> same tiers
+    np.testing.assert_array_equal(tiers, np.asarray(netsim.node_tiers(cfg, n)))
+
+
 _SPEC_FIELDS = st.fixed_dictionaries(dict(
     algo=st.sampled_from(["facade", "el", "dpsgd", "deprl", "dac"]),
     width=st.integers(2, 8),
@@ -166,7 +222,9 @@ _SPEC_FIELDS = st.fixed_dictionaries(dict(
     lr=st.sampled_from([0.01, 0.05, 0.1]),
     warmup_rounds=st.integers(0, 20),
     head_jitter=st.sampled_from([0.0, 0.1]),
-    preset=st.sampled_from([None, "lan", "wan", "edge-churn"]),
+    preset=st.sampled_from([None, "lan", "wan", "edge-churn",
+                            "bursty-wan", "core-edge", "async-edge",
+                            "edge-v2"]),
     eval_batch=st.sampled_from([64, 256]),
 ))
 
@@ -216,6 +274,55 @@ def test_engine_cache_key_properties(fields, perturb):
     # the perturbed spec round-trips through dict lookup as its own key
     table = {a: "a", mutated: "m"}
     assert table[a] == "a" and table[mutated] == "m"
+
+
+# Every NetworkConfig field — including every netsim-v2 knob — must
+# perturb the EngineSpec key: the net config IS a key component, and a
+# collision would hand a sweep cell a program compiled for a different
+# network. (ROADMAP cache-key contract.)
+_NET_PERTURB = {
+    "name": lambda v: v + "-x",
+    "drop_rate": lambda v: v + 0.01,
+    "churn_rate": lambda v: v + 0.01,
+    "outage_rounds": lambda v: v + 1,
+    "straggler_rate": lambda v: v + 0.01,
+    "straggler_slowdown": lambda v: v + 0.5,
+    "latency_s": lambda v: v + 1e-4,
+    "bandwidth_bps": lambda v: v + 1e3,
+    "compute_s_per_step": lambda v: v + 1e-3,
+    "seed": lambda v: v + 1,
+    "events": lambda v: v + (BurstFailure(start=0, duration=1,
+                                          fraction=0.5),),
+    "burst": lambda v: (BurstConfig() if v is None
+                        else dataclasses.replace(v, p_bad=v.p_bad + 0.01)),
+    "classes": lambda v: (LinkClasses() if v is None
+                          else dataclasses.replace(
+                              v, edge_fraction=(v.edge_fraction + 0.1) % 1.0)),
+    "async_gossip": lambda v: not v,
+    "max_staleness": lambda v: v + 1,
+}
+
+
+def test_net_perturb_covers_every_networkconfig_field():
+    """The perturbation table must track the dataclass: a new
+    NetworkConfig knob without a perturbation entry here is a knob whose
+    cache-key behavior is untested."""
+    fields = {f.name for f in dataclasses.fields(NetworkConfig)}
+    assert fields == set(_NET_PERTURB)
+
+
+@_settings
+@given(fields=_SPEC_FIELDS, perturb=st.sampled_from(sorted(_NET_PERTURB)))
+def test_engine_cache_key_net_field_perturbation(fields, perturb):
+    a = _spec_from(fields)
+    net = a.net if a.net is not None else NetworkConfig.preset("lan")
+    base = dataclasses.replace(a, net=net)
+    mutated = dataclasses.replace(
+        base, net=dataclasses.replace(
+            net, **{perturb: _NET_PERTURB[perturb](getattr(net, perturb))}))
+    assert mutated != base
+    table = {base: "b", mutated: "m"}
+    assert table[base] == "b" and table[mutated] == "m"
 
 
 # --------------------------------------------------------------------------

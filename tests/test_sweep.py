@@ -106,6 +106,30 @@ def test_sweep_zero_recompiles_after_first_run(tiny_ds):
     assert cache.compile_count == compiled
 
 
+def test_sweep_v2_presets_zero_recompile_and_warm_parity(tiny_ds):
+    """netsim-v2 knobs keep both sweep invariants: a warm cell never
+    recompiles (the carried channel/gossip state is per-run, not
+    per-compile), and warm-cache runs stay bit-identical to fresh
+    ``run_experiment`` calls — including the async staleness buffers and
+    the donated carry they ride in."""
+    cache = EngineCache()
+    cells = [_cell("el", tiny_ds, net="edge-v2"),
+             _cell("facade", tiny_ds, net="bursty-wan"),
+             _cell("dac", tiny_ds, net="async-edge")]
+    run_sweep(cells, SEEDS[:1], cache=cache)     # first run of each cell
+    compiled = cache.compile_count
+    assert compiled > 0
+    sweep = run_sweep(cells, SEEDS, cache=cache)
+    assert cache.compile_count == compiled       # warm: zero recompiles
+    for cell, cres in zip(cells, sweep.cells):
+        for seed, got in zip(SEEDS, cres.results):
+            ref = run_experiment(cell.algo, CFG, tiny_ds, rounds=4,
+                                 seed=seed,
+                                 net=NetworkConfig.preset(cell.net),
+                                 engine=True, **KW)
+            _assert_runs_identical(ref, got)
+
+
 # ------------------------------------------------- cache-key collisions ----
 def test_cache_key_no_collision_on_local_steps_or_preset(tiny_ds):
     """Two configs differing ONLY in local_steps (or only in netsim
