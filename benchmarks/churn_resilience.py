@@ -99,7 +99,11 @@ def smoke() -> dict:
     return {"status": "ok" if ok else "fail",
             "preset": "edge-churn",
             "sim_seconds": float(res.comm.seconds[-1]),
-            "total_bytes": float(res.comm.bytes[-1])}
+            "total_bytes": float(res.comm.bytes[-1]),
+            # SLO surface: simulated wall-clock + time-to-accuracy, the
+            # same CommLog quantities the roofline tables report
+            "sim_hours": float(res.comm.total_hours),
+            "seconds_to_target": res.comm.seconds_to_target(0.1)}
 
 
 def smoke_v2() -> dict:
@@ -135,6 +139,8 @@ def smoke_v2() -> dict:
             "preset": "edge-v2",
             "sim_seconds": float(res.comm.seconds[-1]),
             "total_bytes": float(res.comm.bytes[-1]),
+            "sim_hours": float(res.comm.total_hours),
+            "seconds_to_target": res.comm.seconds_to_target(0.1),
             "sync_bytes": float(res_sync.comm.bytes[-1]),
             "channel_bad_rate": stats["bad_rate"],
             "channel_mean_burst_len": stats["mean_burst_len"]}

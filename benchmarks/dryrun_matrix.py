@@ -39,9 +39,12 @@ def run(quick: bool = True) -> dict:
         net_rec = {"status": "fail", "preset": "edge-churn", "error": repr(e)}
         print(f"netsim smoke [edge-churn]: FAIL ({e!r})")
     else:
+        s2t = net_rec["seconds_to_target"]
         print(f"netsim smoke [{net_rec['preset']}]: {net_rec['status']} "
               f"({net_rec['sim_seconds']:.2f} sim-s, "
-              f"{net_rec['total_bytes']/1e3:.1f} KB)")
+              f"{net_rec['total_bytes']/1e3:.1f} KB); SLO: "
+              + (f"{s2t:.2f} sim-s to acc 0.1" if s2t is not None
+                 else "target acc 0.1 not reached"))
 
     # netsim-v2 smoke: bursty + core/edge tiers + async stale gossip in one
     # preset, plus channel statistics; reported, never aborts the table
@@ -81,12 +84,29 @@ def run(quick: bool = True) -> dict:
               f"({sweep_rec['compiles_after_first']} compiles, "
               f"{sweep_rec['recompiles']} recompiles after first run)")
 
+    # adaptive-topology smoke: uniform-policy bit-parity + one adaptive
+    # run + the sampler's fairness floor (repro.topo); reported, never
+    # aborts the table
+    try:
+        from . import topo_adapt
+        topo_rec = topo_adapt.smoke()
+    except Exception as e:
+        topo_rec = {"status": "fail", "error": repr(e)}
+        print(f"topo smoke: FAIL ({e!r})")
+    else:
+        print(f"topo smoke [{topo_rec['preset']}]: {topo_rec['status']} "
+              f"(uniform parity {topo_rec['uniform_parity']}, adaptive "
+              f"{topo_rec['adaptive_bytes']/1e3:.1f} KB vs uniform "
+              f"{topo_rec['uniform_bytes']/1e3:.1f} KB, min inclusion "
+              f"{topo_rec['min_inclusion_freq']:.2f})")
+
     recs = [r for r in load("dryrun_*.jsonl") if r.get("tag", "") == ""]
     if not recs:
         print("no dry-run records; run `python -m repro.launch.dryrun --all` "
               "(and --multi-pod) first")
         return {"netsim_smoke": net_rec, "netsim_v2_smoke": v2_rec,
-                "engine_smoke": eng_rec, "sweep_smoke": sweep_rec}
+                "engine_smoke": eng_rec, "sweep_smoke": sweep_rec,
+                "topo_smoke": topo_rec}
     rows = []
     ok = fail = skip = 0
     for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
@@ -112,7 +132,8 @@ def run(quick: bool = True) -> dict:
           f"(full-attention long_500k carve-outs)")
     payload = {"n_ok": ok, "n_fail": fail, "n_skip": skip, "records": recs,
                "netsim_smoke": net_rec, "netsim_v2_smoke": v2_rec,
-               "engine_smoke": eng_rec, "sweep_smoke": sweep_rec}
+               "engine_smoke": eng_rec, "sweep_smoke": sweep_rec,
+               "topo_smoke": topo_rec}
     common.save("dryrun_matrix", payload)
     return payload
 

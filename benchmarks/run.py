@@ -13,7 +13,7 @@ import time
 from . import (churn_resilience, color_shift, comm_cost, dryrun_matrix,
                fair_accuracy, fairness_dp_eo, k_sensitivity, kernel_bench,
                label_skew, percluster_accuracy, round_throughput, seed_sweep,
-               settlement, warmup_ablation)
+               settlement, topo_adapt, warmup_ablation)
 
 SUITES = {
     "percluster_accuracy": percluster_accuracy,   # Fig. 3 / Tab. II
@@ -26,6 +26,7 @@ SUITES = {
     "label_skew": label_skew,                     # App. G
     "color_shift": color_shift,                   # App. H
     "churn_resilience": churn_resilience,         # netsim presets sweep
+    "topo_adapt": topo_adapt,                     # adaptive topology policies
     "round_throughput": round_throughput,         # segment engine rounds/sec
     "seed_sweep": seed_sweep,                     # compile-cache sweep vs naive
     "kernel_bench": kernel_bench,                 # kernels (systems)

@@ -1,0 +1,183 @@
+"""Adaptive topology benchmark (repro.topo): bytes- and simulated-seconds-
+to-target, adaptive vs uniform sampling, under the netsim-v2 presets.
+
+The paper's headline systems result is communication efficiency (Fig. 7:
+GB to target accuracy); netsim added the simulated-time companion. This
+table asks what a *netsim-aware* topology buys on top: the ``reliability``
+policy (per-link goodput EWMAs -> Gumbel-top-k) concentrates the degree
+budget on links that deliver and links that are fast, while the
+``min_inclusion`` fairness floor keeps edge-tier nodes in the mixture —
+the per-tier accuracy-gap table shows throttled, not starved.
+
+Acceptance (asserted, and written to ``results/bench/BENCH_topo.json``):
+on ``core-edge`` the reliability policy strictly reduces simulated
+seconds-to-target vs the uniform sampler, and every node's measured
+inclusion frequency stays >= ``min_inclusion``.
+
+The presets are made communication-bound (``compute_s_per_step``
+scaled down) so the simulated clock measures the links the policy picks,
+not a compute floor common to every policy.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro import netsim
+from repro.core.cache import EngineCache
+from repro.netsim import NetworkConfig
+from repro.topo import TopoConfig, inclusion_stats
+
+from . import common
+
+PRESETS = ("bursty-wan", "core-edge", "edge-v2")
+MIN_INCLUSION = 0.25
+
+
+def _nets() -> dict:
+    # comm-bound scaling: keep every preset's loss/churn/tier structure,
+    # shrink the uniform compute term so round time is link-dominated
+    return {name: NetworkConfig.preset(name, compute_s_per_step=0.002)
+            for name in PRESETS}
+
+
+def _policies() -> dict:
+    adaptive = dict(decay=0.7, min_inclusion=MIN_INCLUSION,
+                    ref_payload_bytes=5e4)
+    return {
+        "uniform": None,
+        "reliability": TopoConfig(policy="reliability", **adaptive),
+        "bandwidth": TopoConfig(policy="bandwidth", **adaptive),
+    }
+
+
+def _tier_row(net, res) -> dict:
+    """Per-tier accuracy from the final per-node accuracies (fairness
+    floor check: edge tier throttled, not starved)."""
+    n = len(res.node_acc)
+    tiers = np.asarray(netsim.node_tiers(net, n))
+    if tiers.max() == 0:        # preset without link classes
+        return {}
+    core = float(np.mean(res.node_acc[tiers == 0]))
+    edge = float(np.mean(res.node_acc[tiers == 1]))
+    return {"core_acc": core, "edge_acc": edge, "tier_gap": core - edge}
+
+
+def run(quick: bool = True) -> dict:
+    cluster_cfgs, rounds, spec, cfg = common.scaled(quick)
+    sizes = cluster_cfgs[1]                      # the imbalanced 6:2 config
+    ds = common.make_ds(spec, sizes, ("rot0", "rot180"))
+    rounds = min(rounds, 64) if quick else rounds
+    degree = common.std_kwargs(quick)["degree"]
+    nets = _nets()
+    policies = _policies()
+
+    cache = EngineCache()
+    rows, payload = [], {}
+    for preset, net in nets.items():
+        results = {}
+        for pol_name, topo in policies.items():
+            results[pol_name] = common.run_algo(
+                "facade", cfg, ds, rounds, quick, net=net, topo=topo,
+                cache=cache)
+        # a target every policy measurably crossed: just under the worst
+        # policy's final mean accuracy, so to-target numbers always exist
+        target = 0.98 * min(r.comm.acc[-1] for r in results.values())
+        for pol_name, res in results.items():
+            b2t = res.comm.bytes_to_target(target)
+            s2t = res.comm.seconds_to_target(target)
+            tier = _tier_row(net, res)
+            rows.append([preset, pol_name, f"{target:.3f}",
+                         f"{b2t / 1e6:.2f} MB", f"{s2t:.1f} s",
+                         f"{res.comm.seconds[-1]:.1f} s",
+                         (f"{tier['core_acc']:.3f}/{tier['edge_acc']:.3f}"
+                          if tier else "-")])
+            payload[f"{preset}/{pol_name}"] = {
+                "target": target,
+                "bytes_to_target": b2t,
+                "seconds_to_target": s2t,
+                "total_bytes": res.comm.bytes[-1],
+                "sim_seconds": res.comm.seconds[-1],
+                "final_acc": res.final_acc,
+                "node_acc": [float(a) for a in res.node_acc],
+                **tier,
+            }
+
+    # measured inclusion frequency of the sampler itself, on the preset
+    # the acceptance bar names (long roll, so the empirical frequency is
+    # a fair estimate of the floored participation probability)
+    incl = inclusion_stats(policies["reliability"], nets["core-edge"],
+                           n=ds.n_nodes, rounds=600, degree=degree)
+    payload["inclusion"] = {
+        "min_inclusion": MIN_INCLUSION,
+        "per_node": [float(f) for f in incl["inclusion"]],
+        "min_node": float(incl["inclusion"].min()),
+        "mean_degree": incl["mean_degree"],
+        "mean_edges": incl["mean_edges"],
+        "edge_budget": incl["edge_budget"],
+    }
+
+    print(common.table(
+        ["preset", "policy", "target", "bytes-to-tgt", "secs-to-tgt",
+         "total sim", "core/edge acc"], rows))
+    print(f"\ninclusion frequency (reliability @ core-edge): min "
+          f"{payload['inclusion']['min_node']:.2f} over {ds.n_nodes} nodes "
+          f"(floor {MIN_INCLUSION})")
+
+    # --- acceptance: adaptivity must pay on the tiered preset ---
+    uni = payload["core-edge/uniform"]
+    rel = payload["core-edge/reliability"]
+    assert rel["seconds_to_target"] < uni["seconds_to_target"], (
+        "reliability policy must strictly reduce simulated "
+        f"seconds-to-target on core-edge: {rel['seconds_to_target']} vs "
+        f"uniform {uni['seconds_to_target']}")
+    assert payload["inclusion"]["min_node"] >= MIN_INCLUSION, (
+        "fairness floor violated: some node's inclusion frequency "
+        f"{payload['inclusion']['min_node']} < {MIN_INCLUSION}")
+    payload["speedup_core_edge"] = (uni["seconds_to_target"]
+                                    / rel["seconds_to_target"])
+    print(f"core-edge seconds-to-target: uniform "
+          f"{uni['seconds_to_target']:.1f}s -> reliability "
+          f"{rel['seconds_to_target']:.1f}s "
+          f"({payload['speedup_core_edge']:.2f}x)")
+    common.save("BENCH_topo", payload)
+    return payload
+
+
+def smoke() -> dict:
+    """Tiny adaptive-topology exercise for the dry-run matrix: uniform
+    policy bit-parity vs ``topo=None`` plus one adaptive run and a
+    sampler-floor check — cheap enough for every invocation."""
+    from repro.configs.facade_paper import lenet
+    from repro.data.synthetic import SynthSpec
+
+    spec = SynthSpec(n_classes=4, image_size=16, samples_per_class=8,
+                     test_per_class=8, seed=3)
+    ds = common.make_ds(spec, (3, 1), ("rot0", "rot180"))
+    cfg = lenet(smoke=True).replace(n_classes=4)
+    net = NetworkConfig.preset("core-edge")
+    kw = dict(local_steps=2, batch_size=4, eval_every=1)
+    ref = common.run_algo("el", cfg, ds, 2, True, net=net, **kw)
+    uni = common.run_algo("el", cfg, ds, 2, True, net=net,
+                          topo=TopoConfig(), **kw)
+    tcfg = TopoConfig(policy="reliability", min_inclusion=0.3)
+    ad = common.run_algo("el", cfg, ds, 2, True, net=net, topo=tcfg, **kw)
+    incl = inclusion_stats(tcfg, net, n=ds.n_nodes, rounds=200, degree=2)
+    ok = (ref.comm.bytes == uni.comm.bytes
+          and ref.comm.seconds == uni.comm.seconds
+          and ref.acc_per_cluster == uni.acc_per_cluster
+          and np.isfinite(ad.comm.bytes[-1])
+          and incl["symmetric"] and incl["binary"]
+          and float(incl["inclusion"].min()) >= 0.3 - 0.1
+          and incl["mean_edges"] <= incl["edge_budget"])
+    return {"status": "ok" if ok else "fail",
+            "preset": "core-edge",
+            "uniform_parity": ref.comm.bytes == uni.comm.bytes,
+            "adaptive_bytes": float(ad.comm.bytes[-1]),
+            "uniform_bytes": float(ref.comm.bytes[-1]),
+            "min_inclusion_freq": float(incl["inclusion"].min()),
+            "sim_hours": ad.comm.total_hours,
+            "seconds_to_target": ad.comm.seconds_to_target(0.1)}
+
+
+if __name__ == "__main__":
+    run()

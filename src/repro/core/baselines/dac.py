@@ -9,6 +9,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro import topo as topo_mod
+
 from .. import split, topology
 from ..bindings import Binding, gossip_mix, local_sgd
 from ..state import BaselineState, freeze_inactive
@@ -30,17 +32,28 @@ def init_dac_extra(n: int):
 
 
 def dac_round(cfg: DACConfig, binding: Binding, state: BaselineState,
-              batches, net=None, gossip=None):
+              batches, net=None, gossip=None, topo=None, topo_cfg=None):
     n = cfg.n_nodes
     key, k_top = jax.random.split(state.rng)
     sim = state.extra["sim"]
 
     # --- sample neighbors: Gumbel-top-k over similarity logits ---
+    # DAC keeps its own data-similarity sampler; an adaptive topology
+    # policy composes with it via the shared participation-gated pipeline
+    # (topo.gumbel_graph) — link-quality logits add to the similarity
+    # logits and the fairness floor gates the round — so partners are
+    # chosen by similarity AND link quality, at the policy's degree budget
     logits = cfg.tau * sim - 1e9 * jnp.eye(n)
-    gumbel = jax.random.gumbel(k_top, (n, n))
-    _, nbr = jax.lax.top_k(logits + gumbel, cfg.degree)      # [n, r]
-    adj = jnp.zeros((n, n)).at[jnp.arange(n)[:, None], nbr].set(1.0)
-    adj = jnp.maximum(adj, adj.T)  # symmetrize (push-pull exchange)
+    part = None
+    if topo_mod.adaptive(topo_cfg):
+        adj, nbr, part = topo_mod.gumbel_graph(
+            topo_cfg, topo, k_top, n,
+            topo_mod.budget(topo_cfg, cfg.degree), extra_logits=logits)
+    else:
+        gumbel = jax.random.gumbel(k_top, (n, n))
+        _, nbr = jax.lax.top_k(logits + gumbel, cfg.degree)  # [n, r]
+        adj = jnp.zeros((n, n)).at[jnp.arange(n)[:, None], nbr].set(1.0)
+        adj = jnp.maximum(adj, adj.T)  # symmetrize (push-pull exchange)
     adj = masked_topology(net, adj)
 
     # what each peer DELIVERS this round: its published snapshot when it
@@ -63,8 +76,9 @@ def dac_round(cfg: DACConfig, binding: Binding, state: BaselineState,
     l_peer = jax.vmap(peer_losses)(jnp.arange(n))            # [n, r]
     rows = jnp.arange(n)[:, None]
     inv_loss = 1.0 / jnp.maximum(l_peer, 1e-6)
-    if net is not None:
-        # a lost/offline exchange brings no model to score — keep old entry
+    if net is not None or part is not None:
+        # a lost/offline/non-participating exchange brings no model to
+        # score — keep the old entry
         delivered = adj[rows, nbr] > 0                       # [n, r]
         inv_loss = jnp.where(delivered, inv_loss, sim[rows, nbr])
     new_sim = sim.at[rows, nbr].set(inv_loss)
@@ -81,6 +95,7 @@ def dac_round(cfg: DACConfig, binding: Binding, state: BaselineState,
 
     model_bytes = split.tree_size_bytes(
         jax.tree.map(lambda l: l[0], state.params))
-    info = comm_info(net, adj, model_bytes, n * cfg.degree)
+    info = comm_info(net, adj, model_bytes, n * cfg.degree,
+                     actual=part is not None)
     return BaselineState(params=params, extra={"sim": new_sim},
                          round=state.round + 1, rng=key), info

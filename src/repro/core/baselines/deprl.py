@@ -10,6 +10,8 @@ from typing import NamedTuple, Any
 import jax
 import jax.numpy as jnp
 
+from repro import topo as topo_mod
+
 from .. import split, topology
 from ..bindings import Binding, gossip_mix, local_sgd
 from ..state import BaselineState, freeze_inactive
@@ -25,9 +27,17 @@ class DeprlConfig:
 
 
 def deprl_round(cfg: DeprlConfig, binding: Binding, state: BaselineState,
-                batches, net=None, gossip=None):
+                batches, net=None, gossip=None, topo=None, topo_cfg=None):
     """state.params [n, ...] full models; only cores are mixed."""
-    adj = masked_topology(net, topology.ring(cfg.n_nodes, cfg.degree))
+    # static-ring legacy topology: adaptive sampling uses repro.topo's own
+    # seeded round stream (see dpsgd_round)
+    if topo_mod.adaptive(topo_cfg):
+        adj = topo_mod.sample(topo_cfg, topo,
+                              topo_mod.static_key(topo_cfg, state.round),
+                              cfg.n_nodes, cfg.degree)
+    else:
+        adj = topology.ring(cfg.n_nodes, cfg.degree)
+    adj = masked_topology(net, adj)
     w = topology.mixing_matrix(adj)
 
     def split_n(params):
@@ -48,6 +58,7 @@ def deprl_round(cfg: DeprlConfig, binding: Binding, state: BaselineState,
         params = freeze_inactive(net.active, params, state.params)
 
     core_bytes = split.tree_size_bytes(jax.tree.map(lambda l: l[0], cores))
-    info = comm_info(net, adj, core_bytes, cfg.n_nodes * cfg.degree)
+    info = comm_info(net, adj, core_bytes, cfg.n_nodes * cfg.degree,
+                     actual=topo_mod.adaptive(topo_cfg))
     return BaselineState(params=params, extra=state.extra,
                          round=state.round + 1, rng=state.rng), info

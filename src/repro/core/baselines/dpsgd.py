@@ -7,6 +7,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro import topo as topo_mod
+
 from .. import split, topology
 from ..bindings import Binding, gossip_mix, local_sgd
 from ..state import BaselineState, freeze_inactive
@@ -22,8 +24,16 @@ class DpsgdConfig:
 
 
 def dpsgd_round(cfg: DpsgdConfig, binding: Binding, state: BaselineState,
-                batches, net=None, gossip=None):
-    adj = masked_topology(net, topology.ring(cfg.n_nodes, cfg.degree))
+                batches, net=None, gossip=None, topo=None, topo_cfg=None):
+    # legacy topology is a static ring (no per-round PRNG to reuse), so an
+    # adaptive policy samples from repro.topo's own seeded round stream
+    if topo_mod.adaptive(topo_cfg):
+        adj = topo_mod.sample(topo_cfg, topo,
+                              topo_mod.static_key(topo_cfg, state.round),
+                              cfg.n_nodes, cfg.degree)
+    else:
+        adj = topology.ring(cfg.n_nodes, cfg.degree)
+    adj = masked_topology(net, adj)
     w = topology.mixing_matrix(adj)
 
     # D-PSGD order: local train, then exchange+aggregate (stale neighbors
@@ -36,6 +46,7 @@ def dpsgd_round(cfg: DpsgdConfig, binding: Binding, state: BaselineState,
 
     model_bytes = split.tree_size_bytes(
         jax.tree.map(lambda l: l[0], state.params))
-    info = comm_info(net, adj, model_bytes, cfg.n_nodes * cfg.degree)
+    info = comm_info(net, adj, model_bytes, cfg.n_nodes * cfg.degree,
+                     actual=topo_mod.adaptive(topo_cfg))
     return BaselineState(params=params, extra=state.extra,
                          round=state.round + 1, rng=state.rng), info

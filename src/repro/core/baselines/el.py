@@ -8,6 +8,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro import topo as topo_mod
+
 from .. import split, topology
 from ..bindings import Binding, gossip_mix, local_sgd
 from ..state import BaselineState, freeze_inactive
@@ -23,12 +25,17 @@ class ELConfig:
 
 
 def el_round(cfg: ELConfig, binding: Binding, state: BaselineState, batches,
-             net=None, gossip=None):
+             net=None, gossip=None, topo=None, topo_cfg=None):
     """batches: pytree leading [n, H, B, ...]; net: optional
     ``netsim.RoundConditions`` masks (see ``facade_round``); gossip:
-    optional published-snapshot tree (async stale gossip)."""
+    optional published-snapshot tree (async stale gossip); topo/topo_cfg:
+    optional adaptive topology policy (:mod:`repro.topo` — uniform stays
+    the legacy draw bit-for-bit, same PRNG split)."""
     key, sub = jax.random.split(state.rng)
-    adj = topology.random_regular(sub, cfg.n_nodes, cfg.degree)
+    if topo_mod.adaptive(topo_cfg):
+        adj = topo_mod.sample(topo_cfg, topo, sub, cfg.n_nodes, cfg.degree)
+    else:
+        adj = topology.random_regular(sub, cfg.n_nodes, cfg.degree)
     adj = masked_topology(net, adj)
     w = topology.mixing_matrix(adj)
 
@@ -41,6 +48,7 @@ def el_round(cfg: ELConfig, binding: Binding, state: BaselineState, batches,
 
     model_bytes = split.tree_size_bytes(
         jax.tree.map(lambda l: l[0], state.params))
-    info = comm_info(net, adj, model_bytes, cfg.n_nodes * cfg.degree)
+    info = comm_info(net, adj, model_bytes, cfg.n_nodes * cfg.degree,
+                     actual=topo_mod.adaptive(topo_cfg))
     return BaselineState(params=params, extra=state.extra,
                          round=state.round + 1, rng=key), info

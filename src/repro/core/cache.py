@@ -30,7 +30,10 @@ schedules share an entry safely. The netsim-v2 knobs (``burst`` /
 ``classes`` / ``async_gossip`` / ``max_staleness``) need no extra key
 field: they live on the frozen ``NetworkConfig``, which is already the
 ``net`` component of the key — ``tests/test_property.py`` pins that
-perturbing ANY ``NetworkConfig`` field forks the key.
+perturbing ANY ``NetworkConfig`` field forks the key. The adaptive
+topology policy is the ``topo`` component (a frozen
+``repro.topo.TopoConfig`` or ``None``) with the same every-field-forks
+contract, pinned the same way.
 
 Donation caveat: segment programs donate their input :class:`EngineCarry`
 buffers. Reusing a cached engine across runs is safe precisely because
@@ -71,6 +74,7 @@ class EngineSpec:
     head_jitter: float = 0.0
     net: Any = None              # NetworkConfig | None
     eval_batch: int = 256        # make_evaluator batch size
+    topo: Any = None             # repro.topo.TopoConfig | None
 
 
 _FP_MEMO: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
@@ -122,13 +126,14 @@ class CacheEntry:
         self.program = runner.algo_program(
             spec.algo, self.binding, spec.n, spec.k, degree=spec.degree,
             local_steps=spec.local_steps, lr=spec.lr,
-            warmup_rounds=spec.warmup_rounds, head_jitter=spec.head_jitter)
+            warmup_rounds=spec.warmup_rounds, head_jitter=spec.head_jitter,
+            topo=spec.topo)
         self.engine = SegmentEngine(
             self.program.round_fn, warmup_fn=self.program.warmup_fn,
             net=spec.net, n=spec.n, local_steps=spec.local_steps,
             batch_size=spec.batch_size,
             track_cluster=self.program.track_cluster,
-            mixable_of=self.program.mixable_of)
+            mixable_of=self.program.mixable_of, topo=spec.topo)
 
     def setup(self, key):
         return self.program.setup(key)

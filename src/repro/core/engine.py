@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import netsim
+from repro import topo as topo_mod
 from repro.data import pipeline
 
 from .netwire import round_seconds
@@ -72,19 +73,24 @@ class SegmentEngine:
     """Compiles and runs eval-to-eval spans for one (algorithm, net) pair.
 
     ``round_fn`` / ``warmup_fn``: the shared stepper signature
-    ``fn(state, batches, net=conds) -> (state, info)`` where ``info``
-    carries ``round_bytes`` (+ ``adj_eff``/``payload_bytes`` under netsim,
-    + ``cluster_id`` for FACADE). Compiled segment programs are cached per
+    ``fn(state, batches, net=conds, gossip=published, topo=tstate) ->
+    (state, info)`` where ``info`` carries ``round_bytes``
+    (+ ``adj_eff``/``payload_bytes`` under netsim, + ``cluster_id`` for
+    FACADE). ``topo`` is the static :class:`repro.topo.TopoConfig` whose
+    per-link EWMA state rides in the carry (``None`` => the legacy
+    sampling path). Compiled segment programs are cached per
     ``(length, warmup)``; carries are donated, so the caller must treat the
     passed-in ``EngineCarry`` as consumed.
     """
 
     def __init__(self, round_fn: Callable, *, n: int, local_steps: int,
                  batch_size: int, net=None, warmup_fn: Callable | None = None,
-                 track_cluster: bool = False, mixable_of: Callable | None = None):
+                 track_cluster: bool = False, mixable_of: Callable | None = None,
+                 topo=None):
         self._round = round_fn
         self._warm = warmup_fn if warmup_fn is not None else round_fn
         self._net = net
+        self._topo = topo           # repro.topo.TopoConfig | None (static)
         self._n = n
         self._h = local_steps
         self._b = batch_size
@@ -105,7 +111,8 @@ class SegmentEngine:
         plus the netsim-v2 on-device state — the Gilbert–Elliott channel
         (``net.burst``) and the async staleness buffer (``net.async_gossip``;
         a leaf-for-leaf COPY of the initial mixable state so the buffer
-        never aliases the donated training buffers)."""
+        never aliases the donated training buffers) — plus the adaptive
+        topology policy's link EWMAs (``None`` for uniform/off)."""
         net, n = self._net, self._n
         chan = netsim.init_channel(net, n) if net is not None else None
         gossip = None
@@ -116,17 +123,18 @@ class SegmentEngine:
                     "SegmentEngine with mixable_of=<state -> gossip tree> "
                     "(runner.algo_program provides it)")
             gossip = netsim.init_gossip(net, n, self._mixable_of(state))
-        return EngineCarry(state, k_data, chan, gossip)
+        topo = topo_mod.init_state(self._topo, net, n)
+        return EngineCarry(state, k_data, chan, gossip, topo)
 
     # -- one segment = one jitted scan --------------------------------------
     def _build(self, length: int, warmup: bool) -> Callable:
         round_fn = self._warm if warmup else self._round
         net, n, h, b, track = self._net, self._n, self._h, self._b, self._track
-        mixable_of = self._mixable_of
+        mixable_of, tcfg = self._mixable_of, self._topo
 
         def segment(carry, start, train_x, train_y):
             def step(carry, rnd):
-                state, k_data, chan, gossip = carry
+                state, k_data, chan, gossip, topo = carry
                 k_data, k_b = jax.random.split(k_data)
                 batches = pipeline.sample_round_batches(
                     k_b, train_x, train_y, h, b)
@@ -136,15 +144,19 @@ class SegmentEngine:
                                                             chan)
                     conds, published = netsim.apply_async(net, conds, gossip)
                 state, info = round_fn(state, batches, net=conds,
-                                       gossip=published)
+                                       gossip=published, topo=topo)
                 if published is not None:
                     gossip = netsim.fold_gossip(net, gossip, conds,
                                                 mixable_of(state))
+                # fold this round's observed conditions into the policy
+                # EWMAs AFTER the round: round t samples from what was
+                # seen up to t-1 (no-op when topo is off / net is None)
+                topo = topo_mod.advance(tcfg, net, topo, conds)
                 out = {"round_bytes": info["round_bytes"],
                        "round_s": round_seconds(net, info, conds, h)}
                 if track:
                     out["cluster_id"] = info["cluster_id"]
-                return EngineCarry(state, k_data, chan, gossip), out
+                return EngineCarry(state, k_data, chan, gossip, topo), out
 
             rnds = start + jnp.arange(length, dtype=jnp.int32)
             return jax.lax.scan(step, carry, rnds)

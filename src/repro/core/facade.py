@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import netsim
+from repro import topo as topo_mod
 
 from . import split, topology
 from .bindings import Binding, gossip_mix, local_sgd
@@ -80,7 +81,8 @@ def _select_heads(binding: Binding, cores, heads, batches):
 
 # --------------------------------------------------------------------------
 def facade_round(fcfg: FacadeConfig, binding: Binding, state: FacadeState,
-                 batches, warmup: bool = False, net=None, gossip=None):
+                 batches, warmup: bool = False, net=None, gossip=None,
+                 topo=None, topo_cfg=None):
     """One synchronous FACADE round for all nodes.
 
     batches: pytree with leading [n, H, B, ...] — per-node, per-local-step.
@@ -92,11 +94,19 @@ def facade_round(fcfg: FacadeConfig, binding: Binding, state: FacadeState,
     gossip: optional async-gossip published-snapshot dict (``cores`` /
     ``heads`` / ``cluster_id``): stale nodes (``net.stale``) expose those
     to their neighbors instead of this round's fresh state.
+    topo/topo_cfg: optional adaptive-topology state + static policy
+    (:mod:`repro.topo`) — an adaptive policy replaces the uniform
+    r-regular draw (same PRNG split, so the uniform policy stays
+    bit-for-bit the legacy path).
     Returns (new_state, info dict with losses/selection/comm bytes).
     """
     n, k = fcfg.n_nodes, fcfg.k
     key, subkey = jax.random.split(state.rng)
-    adj = masked_topology(net, topology.random_regular(subkey, n, fcfg.degree))
+    if topo_mod.adaptive(topo_cfg):
+        adj = topo_mod.sample(topo_cfg, topo, subkey, n, fcfg.degree)
+    else:
+        adj = topology.random_regular(subkey, n, fcfg.degree)
+    adj = masked_topology(net, adj)
     w = topology.mixing_matrix(adj)
 
     # --- what each node publishes this round (== its fresh state unless
@@ -154,7 +164,8 @@ def facade_round(fcfg: FacadeConfig, binding: Binding, state: FacadeState,
     info = {
         "selection_losses": losses,
         "cluster_id": new_cid,
-        **comm_info(net, adj, payload, n * fcfg.degree),
+        **comm_info(net, adj, payload, n * fcfg.degree,
+                    actual=topo_mod.adaptive(topo_cfg)),
     }
     return new_state, info
 

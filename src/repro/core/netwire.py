@@ -44,16 +44,20 @@ def stale_view(net, published, fresh):
     return netsim.tree_select(net.stale, published, fresh)
 
 
-def comm_info(net, adj_eff, payload_bytes, nominal_sends):
+def comm_info(net, adj_eff, payload_bytes, nominal_sends, actual=False):
     """round_bytes accounting + netsim extras.
 
     Without netsim, keep the historical nominal count (``n * degree``
-    directed pushes). Under netsim, count the directed edges that actually
-    carried a message this round; under async gossip, edges out of a
-    stale node carry no NEW bytes (neighbors reuse its cached snapshot),
-    so its rows are excluded.
+    directed pushes) — unless ``actual`` is set (adaptive topology: the
+    drawn graph varies per round, so bytes must count its real directed
+    edges even on an ideal medium). Under netsim, count the directed
+    edges that actually carried a message this round; under async
+    gossip, edges out of a stale node carry no NEW bytes (neighbors
+    reuse its cached snapshot), so its rows are excluded.
     """
     if net is None:
+        if actual:
+            return {"round_bytes": adj_eff.sum() * payload_bytes}
         return {"round_bytes": jnp.asarray(
             nominal_sends * payload_bytes, jnp.float32)}
     sends = adj_eff

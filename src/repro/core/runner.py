@@ -34,6 +34,7 @@ from repro.data import pipeline
 from repro.fairness import demographic_parity, equalized_odds, fair_accuracy
 from repro.models import cnn as cnn_mod
 from repro import netsim
+from repro import topo as topo_mod
 
 from . import facade as facade_mod
 from . import netwire
@@ -56,6 +57,8 @@ class RunResult:
     comm: CommLog
     cluster_history: list      # FACADE: [(round, cluster_id array)]
     final_acc: list            # per-cluster accuracy at the end
+    node_acc: Any = None       # final per-NODE accuracy [n] (per-tier /
+    #                            fairness-floor tables; repro.topo)
 
     def best_fair_acc(self) -> float:
         return max(v for _, v in self.fair_acc) if self.fair_acc else 0.0
@@ -64,8 +67,8 @@ class RunResult:
 # --------------------------------------------------------------------------
 class AlgoSetup(NamedTuple):
     """Everything the drivers need, behind one stepper signature:
-    ``round_fn(state, batches, net=conds, gossip=published) ->
-    (state, info)``."""
+    ``round_fn(state, batches, net=conds, gossip=published, topo=tstate)
+    -> (state, info)``."""
     state: Any                 # initial stacked state
     round_fn: Callable         # main-phase round
     warmup_fn: Callable        # warmup-phase round (== round_fn off-FACADE)
@@ -96,8 +99,12 @@ class AlgoProgram(NamedTuple):
 
 def algo_program(algo: str, binding: Binding, n: int, k: int, *,
                  degree: int, local_steps: int, lr: float,
-                 warmup_rounds: int = 0,
-                 head_jitter: float = 0.0) -> AlgoProgram:
+                 warmup_rounds: int = 0, head_jitter: float = 0.0,
+                 topo=None) -> AlgoProgram:
+    """``topo``: optional frozen :class:`repro.topo.TopoConfig`, closed
+    over the round closures like the algorithm config (static at trace
+    time); its per-link EWMA state is passed per round via the stepper's
+    ``topo=`` kwarg."""
     if algo == "facade":
         fcfg = facade_mod.FacadeConfig(
             n_nodes=n, k=k, degree=degree, local_steps=local_steps, lr=lr,
@@ -106,9 +113,11 @@ def algo_program(algo: str, binding: Binding, n: int, k: int, *,
             init_state=lambda key: init_facade_state(
                 binding, key, n, k, head_jitter=head_jitter),
             round_fn=functools.partial(facade_mod.facade_round, fcfg,
-                                       binding, warmup=False),
+                                       binding, warmup=False,
+                                       topo_cfg=topo),
             warmup_fn=functools.partial(facade_mod.facade_round, fcfg,
-                                        binding, warmup=True),
+                                        binding, warmup=True,
+                                        topo_cfg=topo),
             models_of=lambda s: facade_mod.node_models(s, binding),
             finalize=functools.partial(facade_mod.final_allreduce, fcfg),
             track_cluster=True,
@@ -121,7 +130,7 @@ def algo_program(algo: str, binding: Binding, n: int, k: int, *,
                        lr=lr)
         round_fn = {"el": el_round, "dpsgd": dpsgd_round,
                     "deprl": deprl_round, "dac": dac_round}[algo]
-        fn = functools.partial(round_fn, acfg, binding)
+        fn = functools.partial(round_fn, acfg, binding, topo_cfg=topo)
         return AlgoProgram(
             init_state=lambda key: init_baseline_state(
                 binding, key, n,
@@ -135,12 +144,12 @@ def algo_program(algo: str, binding: Binding, n: int, k: int, *,
 
 def algo_setup(algo: str, binding: Binding, key, n: int, k: int, *,
                degree: int, local_steps: int, lr: float,
-               warmup_rounds: int = 0,
-               head_jitter: float = 0.0) -> AlgoSetup:
+               warmup_rounds: int = 0, head_jitter: float = 0.0,
+               topo=None) -> AlgoSetup:
     return algo_program(algo, binding, n, k, degree=degree,
                         local_steps=local_steps, lr=lr,
                         warmup_rounds=warmup_rounds,
-                        head_jitter=head_jitter).setup(key)
+                        head_jitter=head_jitter, topo=topo).setup(key)
 
 
 # --------------------------------------------------------------------------
@@ -153,9 +162,11 @@ def make_evaluator(binding: Binding, node_cluster, test_x, test_y,
     a ``lax.map`` over fixed-shape eval batches with the node axis vmapped
     inside. Built once per experiment so compiles are reused across evals.
 
-    Returns ``evaluate(models) -> (acc_per_cluster, preds_c, labels_c)``
-    with the same contract as the legacy evaluator: per-cluster mean node
-    accuracy, plus the first node's predictions per cluster for DP/EO.
+    Returns ``evaluate(models) -> (acc_per_cluster, preds_c, labels_c,
+    node_acc)`` — per-cluster mean node accuracy and the first node's
+    predictions per cluster for DP/EO (the legacy contract), plus the
+    per-NODE accuracy vector ``[n]`` the per-tier fairness tables
+    (adaptive topology, :mod:`repro.topo`) consume.
     """
     cfg = binding.cfg
     node_cluster = np.asarray(node_cluster)
@@ -179,14 +190,17 @@ def make_evaluator(binding: Binding, node_cluster, test_x, test_y,
 
     def evaluate(models):
         accs, preds_c, labels_c = [], [], []
+        node_acc = np.zeros(node_cluster.shape[0], np.float64)
         for idx, xb, valid, y in clusters:
             models_c = jax.tree.map(lambda l: l[idx], models)
             p = np.asarray(predict(models_c, xb))    # [nb, m, B]
             p = np.moveaxis(p, 1, 0).reshape(len(idx), -1)[:, valid]
-            accs.append(float((p == y[None, :]).mean()))
+            eq = p == y[None, :]
+            accs.append(float(eq.mean()))
+            node_acc[idx] = eq.mean(axis=1)
             preds_c.append(p[0])
             labels_c.append(y)
-        return accs, preds_c, labels_c
+        return accs, preds_c, labels_c, node_acc
 
     return evaluate
 
@@ -202,6 +216,7 @@ class _History:
         self.acc_hist, self.fair_hist, self.cluster_hist = [], [], []
         self.dp = self.eo = 0.0
         self.accs = []
+        self.node_acc = None
         self._weights = np.asarray(node_cluster)
         self._n = n
         self._evaluator = evaluator
@@ -216,8 +231,9 @@ class _History:
         """Evaluate at round ``rnd`` (1-based), record, and report whether
         ``target_acc`` is reached (the driver then stops)."""
         models = self._models_of(state)
-        accs, preds_c, labels_c = self._evaluator(models)
+        accs, preds_c, labels_c, node_acc = self._evaluator(models)
         self.accs = accs
+        self.node_acc = node_acc
         self.acc_hist.append((rnd, accs))
         fa = fair_accuracy(accs)
         self.fair_hist.append((rnd, fa))
@@ -235,7 +251,7 @@ class _History:
         return RunResult(algo=algo, acc_per_cluster=self.acc_hist,
                          fair_acc=self.fair_hist, dp=self.dp, eo=self.eo,
                          comm=self.comm, cluster_history=self.cluster_hist,
-                         final_acc=self.accs)
+                         final_acc=self.accs, node_acc=self.node_acc)
 
 
 # --------------------------------------------------------------------------
@@ -245,6 +261,7 @@ def run_experiment(algo: str, cfg, dataset, *, rounds: int, k: int | None = None
                    warmup_rounds: int = 0, head_jitter: float = 0.0,
                    target_acc: float | None = None,
                    net: "netsim.NetworkConfig | None" = None,
+                   topo: "topo_mod.TopoConfig | None" = None,
                    engine: bool = True,
                    cache: EngineCache | None = None,
                    eval_batch: int = 256,
@@ -256,6 +273,12 @@ def run_experiment(algo: str, cfg, dataset, *, rounds: int, k: int | None = None
     (e.g. ``net=NetworkConfig.preset("edge-churn")``). The returned
     ``CommLog`` then carries simulated wall-clock seconds next to bytes.
     ``None`` keeps the historical ideal-medium path untouched.
+
+    ``topo``: optional :class:`repro.topo.TopoConfig` — an adaptive,
+    netsim-aware topology policy (per-link delivery/time EWMAs carried
+    on device, Gumbel-top-k sampling, ``min_inclusion`` fairness floor).
+    ``None`` and ``TopoConfig(policy="uniform")`` are bit-for-bit the
+    legacy sampling path for every algorithm and both drivers.
 
     ``engine``: ``True`` compiles whole eval-to-eval spans into one XLA
     dispatch (scan-fused segment engine, the fast path); ``False`` runs the
@@ -278,6 +301,12 @@ def run_experiment(algo: str, cfg, dataset, *, rounds: int, k: int | None = None
                             # here keeps baseline cache keys from forking
     n = dataset.n_nodes
     k = k if k is not None else dataset.k
+    for r in {degree, topo_mod.budget(topo, degree)}:
+        if not 1 <= r < n:
+            raise ValueError(
+                f"degree={r} out of range for n={n} nodes: the topology "
+                "builders silently collapse multi-edges at degree >= n; "
+                "pick 1 <= degree <= n - 1")
     key = jax.random.PRNGKey(seed)
     k_init, k_data = jax.random.split(key)
 
@@ -289,7 +318,7 @@ def run_experiment(algo: str, cfg, dataset, *, rounds: int, k: int | None = None
         algo=algo, cfg=cfg, n=n, k=k, degree=degree,
         local_steps=local_steps, batch_size=batch_size, lr=lr,
         warmup_rounds=warmup_rounds, head_jitter=head_jitter, net=net,
-        eval_batch=eval_batch)
+        eval_batch=eval_batch, topo=topo)
     entry = cache.entry(spec)
     setup = entry.setup(k_init)
     evaluator = cache.evaluator(entry.binding, dataset,
@@ -304,7 +333,7 @@ def run_experiment(algo: str, cfg, dataset, *, rounds: int, k: int | None = None
         _drive_legacy(setup, hist, k_data, train_x, train_y, rounds=rounds,
                       eval_every=eval_every, warmup_rounds=warmup_rounds,
                       local_steps=local_steps, batch_size=batch_size,
-                      net=net, n=n)
+                      net=net, n=n, topo=topo)
     return hist.result(algo)
 
 
@@ -346,13 +375,19 @@ def _drive_engine(eng, setup: AlgoSetup, hist: _History, k_data,
 
 def _drive_legacy(setup: AlgoSetup, hist: _History, k_data, train_x, train_y,
                   *, rounds, eval_every, warmup_rounds, local_steps,
-                  batch_size, net, n):
+                  batch_size, net, n, topo=None):
     """Legacy per-round driver: eager sampling, one jitted dispatch per
     round, per-round host syncs. Kept as the engine's parity reference and
-    the benchmark baseline."""
+    the benchmark baseline. ``topo`` is the static TopoConfig; its EWMA
+    state is threaded through Python and advanced by the SAME
+    ``repro.topo.advance`` the engine scans over."""
     round_main = jax.jit(setup.round_fn)
     round_warm = jax.jit(setup.warmup_fn)
     chan = gossip = None
+    tstate = topo_mod.init_state(topo, net, n)
+    topo_fn = None
+    if tstate is not None and net is not None:
+        topo_fn = jax.jit(functools.partial(topo_mod.advance, topo, net))
     if net is not None:
         conds_fn = jax.jit(
             lambda rnd, chan: netsim.advance_conditions(net, n, rnd, chan))
@@ -371,10 +406,13 @@ def _drive_legacy(setup: AlgoSetup, hist: _History, k_data, train_x, train_y,
             conds, chan = conds_fn(rnd, chan)
             conds, published = netsim.apply_async(net, conds, gossip)
         fn = round_warm if rnd < warmup_rounds else round_main
-        state, info = fn(state, batches, net=conds, gossip=published)
+        state, info = fn(state, batches, net=conds, gossip=published,
+                         topo=tstate)
         if published is not None:
             gossip = netsim.fold_gossip(net, gossip, conds,
                                         setup.mixable_of(state))
+        if topo_fn is not None:
+            tstate = topo_fn(tstate, conds)
         round_s = 0.0
         if net is not None:
             round_s = float(time_fn(info, conds))

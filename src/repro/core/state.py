@@ -34,14 +34,16 @@ class EngineCarry(NamedTuple):
     """Scan carry of the segment engine (core/engine.py): the algorithm
     state plus the data-sampling PRNG key, plus the netsim-v2 on-device
     state — the bursty-link channel and the async-gossip staleness buffer
-    (both ``None`` unless the run's ``NetworkConfig`` enables them). The
-    round counter rides in the scanned xs, so the whole carry is donated
-    buffer-for-buffer between segments (``donate_argnums``) —
-    node-stacked params update in place."""
+    (both ``None`` unless the run's ``NetworkConfig`` enables them) —
+    plus the adaptive-topology EWMA state (``None`` unless the run's
+    ``TopoConfig`` is adaptive). The round counter rides in the scanned
+    xs, so the whole carry is donated buffer-for-buffer between segments
+    (``donate_argnums``) — node-stacked params update in place."""
     state: Any           # FacadeState | BaselineState
     k_data: Any          # PRNG key consumed by pipeline.sample_round_batches
     chan: Any = None     # netsim.ChannelState (Gilbert–Elliott) | None
     gossip: Any = None   # netsim.GossipState (async staleness) | None
+    topo: Any = None     # repro.topo.TopoState (link EWMAs) | None
 
 
 def _stack_n(tree, n):

@@ -17,6 +17,17 @@ import jax
 import jax.numpy as jnp
 
 
+def _check_degree(n: int, r: int):
+    """Degrees at or above ``n`` used to silently collapse into
+    multi-edges (a nominally r-regular draw quietly delivering degree
+    <= n - 1); fail loudly instead. ``n`` and ``r`` are static Python
+    ints, so this runs at trace time and costs nothing jitted."""
+    if not 1 <= r < n:
+        raise ValueError(
+            f"degree={r} out of range for n={n} nodes: a simple graph "
+            f"supports 1 <= degree <= n - 1 (multi-edges collapse)")
+
+
 def random_regular(key, n: int, r: int):
     """Random r-regular-ish undirected graph via r/2 random cycles.
 
@@ -24,7 +35,9 @@ def random_regular(key, n: int, r: int):
     Guaranteed: symmetric, zero diagonal, every node degree >= r//2*2 and
     <= r (multi-edges collapse). Matches EL's 'sample s out-neighbors'
     spirit while staying jit-friendly (no rejection sampling).
+    Raises ``ValueError`` when ``r`` is outside ``[1, n - 1]``.
     """
+    _check_degree(n, r)
     a = jnp.zeros((n, n), jnp.float32)
     n_cycles = max(1, r // 2)
     keys = jax.random.split(key, n_cycles + 1)
@@ -46,7 +59,9 @@ def random_regular(key, n: int, r: int):
 
 
 def ring(n: int, r: int = 2):
-    """Static ring (D-PSGD default) with r//2 hops each side."""
+    """Static ring (D-PSGD default) with r//2 hops each side.
+    Raises ``ValueError`` when ``r`` is outside ``[1, n - 1]``."""
+    _check_degree(n, r)
     a = jnp.zeros((n, n), jnp.float32)
     idx = jnp.arange(n)
     for hop in range(1, max(1, r // 2) + 1):

@@ -7,6 +7,14 @@ continuous batching over a request queue.
 
     python -m repro.launch.serve --arch llama3.2-1b --requests 8 \\
         --prompt-len 64 --gen-len 32
+
+``--net PRESET`` overlays a :mod:`repro.netsim` link model on the served
+traffic and turns the final line into an SLO report: request/response
+bytes flow through the preset's latency/bandwidth cost model into a
+:class:`repro.comm.CommLog` (the same accounting the training benchmarks
+use), which reports simulated network hours (``total_hours``) and
+simulated seconds to drain 50% / 100% of the request queue
+(``seconds_to_target``).
 """
 from __future__ import annotations
 
@@ -18,14 +26,42 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs as _configs  # noqa: F401
+from repro import netsim
+from repro.comm import CommLog
 from repro.models import api, transformer
 from repro.models.base import get_config, list_archs
+
+TOKEN_BYTES = 4  # int32 token ids on the wire
 
 
 def make_requests(rng, n, prompt_len, vocab):
     return [rng.integers(1, vocab, size=(rng.integers(
         prompt_len // 2, prompt_len + 1),)).astype(np.int32)
         for _ in range(n)]
+
+
+def wire_params(net) -> tuple:
+    """Scalar ``(latency_s, bandwidth_bps)`` for the client link: tiered
+    presets (``net.classes``) serve at their WORST link class — clients
+    are the edge devices — everything else at the uniform scalars (which
+    tiered presets leave at core defaults, so using them would silently
+    report an all-core SLO)."""
+    if net.classes is None:
+        return net.latency_s, net.bandwidth_bps
+    cl = net.classes
+    return (max(cl.core_latency_s, cl.edge_latency_s),
+            min(cl.core_bandwidth_bps, cl.edge_bandwidth_bps))
+
+
+def batch_net_seconds(net, prompt_bytes: float, gen_len: int,
+                      response_bytes: float) -> float:
+    """Simulated network seconds for one served batch: the prompts arrive
+    in one transfer, then each decoded token streams back to its client —
+    one latency hit per step plus serialization of the full response."""
+    lat, bw = wire_params(net)
+    upload = lat + 8.0 * prompt_bytes / bw
+    stream = gen_len * lat + 8.0 * response_bytes / bw
+    return float(upload + stream)
 
 
 def main(argv=None) -> None:
@@ -37,6 +73,11 @@ def main(argv=None) -> None:
     ap.add_argument("--gen-len", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--net", default=None,
+                    choices=sorted(netsim.PRESETS),
+                    help="netsim preset overlay: report simulated network "
+                         "time (CommLog total_hours / seconds_to_target) "
+                         "next to the real tok/s")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=True)
@@ -61,8 +102,13 @@ def main(argv=None) -> None:
     def decode_fn(params, cache, tokens, pos):
         return transformer.decode_step(cfg, params, cache, tokens, pos)
 
+    net = netsim.NetworkConfig.preset(args.net) if args.net else None
+    comm = CommLog()
+    n_requests = len(queue)
+
     t0 = time.time()
     done = 0
+    batch_no = 0
     while queue:
         batch_reqs = [queue.pop(0) for _ in range(min(args.batch, len(queue)))]
         b = len(batch_reqs)
@@ -87,6 +133,19 @@ def main(argv=None) -> None:
                 last = jnp.argmax(logits, -1).astype(jnp.int32)
             pos = pos + 1
         done += b
+        batch_no += 1
+        if net is not None:
+            # SLO accounting: prompts in + streamed tokens out, through
+            # the preset's latency/bandwidth model; "accuracy" is the
+            # drained fraction of the queue, so seconds_to_target(f) is
+            # the simulated time to serve fraction f of the requests
+            prompt_bytes = float(lens.sum()) * TOKEN_BYTES
+            response_bytes = float(b * args.gen_len) * TOKEN_BYTES
+            comm.record(batch_no, prompt_bytes + response_bytes,
+                        acc=done / n_requests,
+                        round_s=batch_net_seconds(net, prompt_bytes,
+                                                  args.gen_len,
+                                                  response_bytes))
         print(f"batch of {b}: prompts {lens.tolist()} -> "
               f"{args.gen_len} tokens each "
               f"(first req head: {out_tokens[0, :8].tolist()})", flush=True)
@@ -95,6 +154,13 @@ def main(argv=None) -> None:
     total_tok = done * args.gen_len
     print(f"served {done} requests, {total_tok} tokens "
           f"in {dt:.1f}s = {total_tok / dt:.1f} tok/s")
+    if net is not None:
+        half = comm.seconds_to_target(0.5)
+        full = comm.seconds_to_target(1.0)
+        print(f"SLO [{net.name}]: {comm.total_hours * 3600:.3f} simulated "
+              f"network seconds total ({comm.total_hours:.6f} h, "
+              f"{comm.total_gb * 1e3:.3f} MB on the wire); "
+              f"p50 queue drain {half:.3f}s, full drain {full:.3f}s")
 
 
 if __name__ == "__main__":

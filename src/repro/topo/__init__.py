@@ -1,0 +1,34 @@
+"""repro.topo — adaptive, netsim-aware topology policies with a
+fairness floor.
+
+Instead of sampling every round's gossip graph blind
+(``core/topology.py``'s uniform r-regular draw), a
+:class:`~repro.topo.policy.TopoConfig` makes the sampler a carried,
+learned, on-device policy: per-link EWMAs of observed delivery and link
+seconds (:class:`~repro.topo.policy.TopoState`, riding in the engine's
+donated carry next to the netsim channel/gossip state) drive
+Gumbel-top-k sampling toward reliable/fast links, while a
+``min_inclusion`` participation floor guarantees edge-tier nodes are
+throttled, never starved.
+
+Usage — any algorithm, any netsim preset::
+
+    from repro.core.runner import run_experiment
+    from repro.netsim import NetworkConfig
+    from repro.topo import TopoConfig
+
+    res = run_experiment("facade", cfg, ds, rounds=100,
+                         net=NetworkConfig.preset("core-edge"),
+                         topo=TopoConfig(policy="reliability",
+                                         min_inclusion=0.2))
+
+``topo=None`` and ``TopoConfig(policy="uniform")`` are bit-for-bit the
+legacy sampling path for every algorithm and both drivers
+(``tests/test_topo.py``); ``TopoConfig`` is an ``EngineSpec`` cache-key
+component, so every field perturbation forks the sweep cache.
+"""
+from .diagnostics import inclusion_stats  # noqa: F401
+from .policy import (POLICIES, TopoConfig, TopoState, adaptive,  # noqa: F401
+                     advance, budget, gumbel_graph, init_state, link_logits,
+                     link_scores, participants, participation_probs, sample,
+                     static_key)

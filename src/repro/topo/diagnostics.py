@@ -1,0 +1,67 @@
+"""Empirical diagnostics over the adaptive topology sampler.
+
+The fairness floor makes a claim — every node participates in at least
+``min_inclusion`` of the rounds no matter how the learned scores rank it
+— that tests and benchmark smokes want to check against *measured*
+behavior, the way ``netsim.channel_stats`` measures the bursty channel.
+:func:`inclusion_stats` rolls the exact production path (per round:
+``netsim.advance_conditions`` -> :func:`repro.topo.sample` ->
+:func:`repro.topo.advance`) in one ``lax.scan`` and reduces it to
+host-side statistics.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import netsim
+
+from . import policy as policy_mod
+
+
+def inclusion_stats(cfg, net, n: int, rounds: int, degree: int,
+                    seed: int = 0) -> dict:
+    """Roll the adaptive sampler for ``rounds`` rounds and measure it.
+
+    Returns per-node ``inclusion`` frequency (fraction of rounds with
+    degree >= 1), ``participation`` frequency (the sampler's coin, the
+    quantity the floor bounds), mean/max degree, the mean undirected
+    edge count per round, and structural flags (``symmetric`` /
+    ``binary`` over every drawn adjacency). ``cfg`` must be adaptive.
+    """
+    if not policy_mod.adaptive(cfg):
+        raise ValueError("inclusion_stats needs an adaptive TopoConfig "
+                         "(policy 'reliability' or 'bandwidth')")
+    r = policy_mod.budget(cfg, degree)
+    state0 = policy_mod.init_state(cfg, net, n)
+    chan0 = netsim.init_channel(net, n) if net is not None else None
+    key = jax.random.PRNGKey(seed)
+
+    def step(carry, rnd):
+        state, chan = carry
+        conds = None
+        if net is not None:
+            conds, chan = netsim.advance_conditions(net, n, rnd, chan)
+        k_rnd = jax.random.fold_in(key, rnd)
+        k_part, _ = jax.random.split(k_rnd)
+        part = policy_mod.participants(cfg, state, k_part, n)
+        adj = policy_mod.sample(cfg, state, k_rnd, n, r)
+        state = policy_mod.advance(cfg, net, state, conds)
+        return (state, chan), (adj, part)
+
+    (_, _), (adjs, parts) = jax.lax.scan(
+        step, (state0, chan0), jnp.arange(rounds, dtype=jnp.int32))
+    adjs, parts = np.asarray(adjs), np.asarray(parts)
+
+    deg = adjs.sum(axis=2)                                  # [rounds, n]
+    return {
+        "inclusion": (deg > 0).mean(axis=0),                # [n]
+        "participation": parts.mean(axis=0),                # [n]
+        "mean_degree": float(deg.mean()),
+        "max_degree": float(deg.max()),
+        "mean_edges": float(adjs.sum(axis=(1, 2)).mean() / 2.0),
+        "edge_budget": n * max(1, r // 2),
+        "symmetric": bool((adjs == np.swapaxes(adjs, 1, 2)).all()),
+        "binary": bool(set(np.unique(adjs)) <= {0.0, 1.0}),
+    }

@@ -184,7 +184,7 @@ def test_vectorized_evaluator_matches_per_node_loop(tiny_ds):
     models = setup.models_of(setup.state)
     evaluate = make_evaluator(binding, tiny_ds.node_cluster,
                               tiny_ds.test_x, tiny_ds.test_y, batch=5)
-    accs, preds_c, labels_c = evaluate(models)
+    accs, preds_c, labels_c, node_acc = evaluate(models)
 
     from repro.models import cnn as cnn_mod
     node_cluster = np.asarray(tiny_ds.node_cluster)
@@ -200,3 +200,8 @@ def test_vectorized_evaluator_matches_per_node_loop(tiny_ds):
         assert accs[c] == pytest.approx(ref_acc, abs=1e-12)
         np.testing.assert_array_equal(preds_c[c], per_node[0])
         np.testing.assert_array_equal(labels_c[c], np.asarray(y))
+        # the per-node accuracy vector (per-tier fairness tables) agrees
+        # with the per-node reference loop, at the node's global index
+        for i, p in zip(nodes, per_node):
+            assert node_acc[i] == pytest.approx(
+                float((p == np.asarray(y)).mean()), abs=1e-12)

@@ -20,6 +20,8 @@ from repro.netsim import (BurstConfig, BurstFailure, LinkClasses,
                           NetworkConfig)
 from repro.models import transformer
 from repro.models.attention import chunked_sdpa, sdpa
+from repro.topo import TopoConfig, TopoState
+from repro import topo as topo_mod
 from repro.roofline.analysis import (collective_bytes_from_hlo,
                                      parse_shape_list)
 
@@ -226,6 +228,7 @@ _SPEC_FIELDS = st.fixed_dictionaries(dict(
                             "bursty-wan", "core-edge", "async-edge",
                             "edge-v2"]),
     eval_batch=st.sampled_from([64, 256]),
+    topo=st.sampled_from([None, "uniform", "reliability", "bandwidth"]),
 ))
 
 _PERTURB = {
@@ -242,6 +245,8 @@ _PERTURB = {
     "net": lambda v: (NetworkConfig.preset("hostile") if v is None
                       else None),
     "eval_batch": lambda v: v + 1,
+    "topo": lambda v: (TopoConfig(policy="reliability") if v is None
+                       else None),
 }
 
 
@@ -250,13 +255,14 @@ def _spec_from(fields) -> EngineSpec:
                     width=fields["width"], n_classes=4)
     net = (NetworkConfig.preset(fields["preset"])
            if fields["preset"] else None)
+    topo = TopoConfig(policy=fields["topo"]) if fields["topo"] else None
     return EngineSpec(algo=fields["algo"], cfg=cfg, n=fields["n"],
                       k=fields["k"], degree=fields["degree"],
                       local_steps=fields["local_steps"],
                       batch_size=fields["batch_size"], lr=fields["lr"],
                       warmup_rounds=fields["warmup_rounds"],
                       head_jitter=fields["head_jitter"], net=net,
-                      eval_batch=fields["eval_batch"])
+                      eval_batch=fields["eval_batch"], topo=topo)
 
 
 @_settings
@@ -323,6 +329,80 @@ def test_engine_cache_key_net_field_perturbation(fields, perturb):
     assert mutated != base
     table = {base: "b", mutated: "m"}
     assert table[base] == "b" and table[mutated] == "m"
+
+
+# Every TopoConfig field must perturb the EngineSpec key the same way —
+# the topology policy config is the ``topo`` key component, and a
+# collision would hand a sweep cell a program compiled for a different
+# sampler. ONE perturbation table serves both suites: it lives in
+# tests/test_topo.py (the hypothesis-free twin that runs everywhere,
+# next to the fields-coverage completeness check), and this module
+# imports it so the two can never drift.
+from test_topo import _TOPO_PERTURB  # noqa: E402
+
+
+@_settings
+@given(fields=_SPEC_FIELDS, perturb=st.sampled_from(sorted(_TOPO_PERTURB)))
+def test_engine_cache_key_topo_field_perturbation(fields, perturb):
+    a = _spec_from(fields)
+    topo = a.topo if a.topo is not None else TopoConfig(policy="reliability")
+    base = dataclasses.replace(a, topo=topo)
+    mutated = dataclasses.replace(
+        base, topo=dataclasses.replace(
+            topo, **{perturb: _TOPO_PERTURB[perturb](getattr(topo, perturb))}))
+    assert mutated != base
+    table = {base: "b", mutated: "m"}
+    assert table[base] == "b" and table[mutated] == "m"
+
+
+# ------------------------------------------------ adaptive graphs (topo) --
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(4, 24), r=st.integers(1, 6),
+       floor=st.floats(0.0, 1.0), weak=st.integers(0, 99),
+       policy=st.sampled_from(["reliability", "bandwidth"]),
+       seed=st.integers(0, 99))
+def test_adaptive_graph_invariants(n, r, floor, weak, policy, seed):
+    """Structural invariants of the adaptive sampler under an arbitrary
+    hostile score matrix: symmetric {0,1}, zero diagonal, never more
+    undirected edges than the legacy degree budget, and the exact
+    participation floor ``p_i >= min_inclusion`` for every node — the
+    guarantee that makes reliability-weighted sampling safe for the
+    paper's under-represented clusters."""
+    r = min(r, n - 1)
+    weak = weak % n
+    rng = np.random.default_rng(seed)
+    d = rng.uniform(0.0, 1.0, (n, n)).astype(np.float32)
+    t = rng.uniform(1e-3, 2.0, (n, n)).astype(np.float32)
+    d, t = np.triu(d, 1), np.triu(t, 1)
+    d, t = d + d.T, t + t.T
+    d[weak, :] = d[:, weak] = 0.0          # hostile: starve one node
+    state = TopoState(delivery=jnp.asarray(d), link_s=jnp.asarray(t))
+    cfg = TopoConfig(policy=policy, min_inclusion=floor)
+
+    p = np.asarray(topo_mod.participation_probs(cfg, state))
+    assert np.all(p >= floor - 1e-6) and np.all(p <= 1.0 + 1e-6)
+
+    adj = np.asarray(topo_mod.sample(cfg, state, jax.random.PRNGKey(seed),
+                                     n, r))
+    kpick = max(1, r // 2)
+    assert np.array_equal(adj, adj.T)
+    assert np.all(np.diag(adj) == 0)
+    assert set(np.unique(adj)) <= {0.0, 1.0}
+    assert adj.sum() <= 2 * n * kpick      # degree budget respected
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(4, 16), seed=st.integers(0, 99))
+def test_uniform_policy_sampler_is_legacy(n, seed):
+    """The uniform policy never reaches the adaptive sampler: the round
+    functions branch on ``adaptive(cfg)``, which must be False for
+    ``None`` and for uniform configs regardless of other fields."""
+    assert not topo_mod.adaptive(None)
+    assert not topo_mod.adaptive(TopoConfig())
+    assert not topo_mod.adaptive(TopoConfig(min_inclusion=0.7, seed=seed))
+    assert topo_mod.adaptive(TopoConfig(policy="reliability"))
+    # and a uniform config mints no carry state
+    assert topo_mod.init_state(TopoConfig(), None, n) is None
 
 
 # --------------------------------------------------------------------------

@@ -130,6 +130,37 @@ def test_sweep_v2_presets_zero_recompile_and_warm_parity(tiny_ds):
             _assert_runs_identical(ref, got)
 
 
+def test_sweep_topo_zero_recompile_and_warm_parity(tiny_ds):
+    """Adaptive topology keeps both sweep invariants: the TopoState EWMAs
+    are per-run carry state (minted fresh each run, donated through the
+    scan), so a warm cell never recompiles, and warm-cache runs stay
+    bit-identical to fresh ``run_experiment(topo=...)`` calls. A cell
+    with ``topo`` set and one without fork into separate entries."""
+    from repro.topo import TopoConfig
+
+    topo = TopoConfig(policy="reliability", min_inclusion=0.25)
+    cache = EngineCache()
+    cells = [_cell("el", tiny_ds, net="core-edge", topo=topo),
+             _cell("facade", tiny_ds, net="edge-v2", topo=topo)]
+    run_sweep(cells, SEEDS[:1], cache=cache)     # first run of each cell
+    compiled = cache.compile_count
+    assert compiled > 0
+    sweep = run_sweep(cells, SEEDS, cache=cache)
+    assert cache.compile_count == compiled       # warm: zero recompiles
+    for cell, cres in zip(cells, sweep.cells):
+        for seed, got in zip(SEEDS, cres.results):
+            ref = run_experiment(cell.algo, CFG, tiny_ds, rounds=4,
+                                 seed=seed, topo=topo,
+                                 net=NetworkConfig.preset(cell.net),
+                                 engine=True, **KW)
+            _assert_runs_identical(ref, got)
+    # topo on/off is a key axis: the same cell without topo is a miss
+    before = cache.misses
+    run_experiment("el", CFG, tiny_ds, rounds=4, cache=cache,
+                   net=NetworkConfig.preset("core-edge"), **KW)
+    assert cache.misses == before + 1
+
+
 # ------------------------------------------------- cache-key collisions ----
 def test_cache_key_no_collision_on_local_steps_or_preset(tiny_ds):
     """Two configs differing ONLY in local_steps (or only in netsim

@@ -1,0 +1,350 @@
+"""repro.topo: adaptive, netsim-aware topology policies with a fairness
+floor.
+
+Pins the subsystem's contracts: ``topo=None`` and
+``TopoConfig(policy="uniform")`` are bit-for-bit the legacy sampling path
+for FACADE + all four baselines on BOTH drivers; adaptive policies stay
+engine/legacy bit-identical (the EWMA state rides the donated carry vs
+the Python loop); the sampler keeps its structural invariants (symmetry,
+zero diagonal, edge budget) and its deterministic fairness floor
+(participation probability >= ``min_inclusion`` under hostile scores);
+the EWMAs actually learn the simulated network; and the out-of-range
+degree validation regression."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import netsim
+from repro import topo as topo_mod
+from repro.configs.facade_paper import lenet
+from repro.core import topology
+from repro.core.cache import EngineSpec
+from repro.core.netwire import comm_info
+from repro.core.runner import run_experiment
+from repro.data.synthetic import SynthSpec, make_clustered_data
+from repro.netsim import NetworkConfig, RoundConditions
+from repro.topo import TopoConfig, TopoState, inclusion_stats
+
+pytestmark = pytest.mark.tier0
+
+CFG = lenet(smoke=True).replace(n_classes=4)
+ALL_ALGOS = ("facade", "el", "dpsgd", "deprl", "dac")
+KW = dict(rounds=3, k=2, degree=2, local_steps=2, batch_size=4, lr=0.05,
+          eval_every=1, seed=0)
+ADAPTIVE = TopoConfig(policy="reliability", min_inclusion=0.2, decay=0.7)
+
+
+@pytest.fixture(scope="module")
+def tiny_ds():
+    spec = SynthSpec(n_classes=4, image_size=16, samples_per_class=8,
+                     test_per_class=8, seed=3)
+    return make_clustered_data(spec, cluster_sizes=(3, 1),
+                               transforms=("rot0", "rot180"))
+
+
+def _assert_runs_identical(ref, got):
+    assert ref.acc_per_cluster == got.acc_per_cluster
+    assert ref.fair_acc == got.fair_acc
+    assert ref.dp == got.dp and ref.eo == got.eo
+    assert ref.final_acc == got.final_acc
+    assert ref.comm.rounds == got.comm.rounds
+    assert ref.comm.bytes == got.comm.bytes          # exact float equality
+    assert ref.comm.seconds == got.comm.seconds
+    np.testing.assert_array_equal(np.asarray(ref.node_acc),
+                                  np.asarray(got.node_acc))
+    for (r1, c1), (r2, c2) in zip(ref.cluster_history, got.cluster_history):
+        assert r1 == r2
+        np.testing.assert_array_equal(c1, c2)
+
+
+def _hostile_state(n, weak=0, lo=1e-8, hi=5.0):
+    """Scores engineered to starve node ``weak``: every link touching it
+    is (near) worthless, every other link is great."""
+    d = np.full((n, n), hi, np.float32)
+    d[weak, :] = d[:, weak] = lo
+    np.fill_diagonal(d, 0.0)
+    return TopoState(delivery=jnp.asarray(d),
+                     link_s=jnp.asarray(np.ones((n, n), np.float32)))
+
+
+# -------------------------------------------------- uniform bit-parity ---
+@pytest.mark.parametrize("engine", [True, False], ids=["engine", "legacy"])
+@pytest.mark.parametrize("algo", ALL_ALGOS)
+def test_uniform_policy_is_legacy_bitforbit(algo, engine, tiny_ds):
+    """THE compatibility contract: ``TopoConfig(policy='uniform')`` and
+    ``topo=None`` produce identical trajectories, bytes AND simulated
+    seconds on both drivers — the round functions never even branch into
+    the adaptive sampler (same PRNG splits, same graphs)."""
+    net = NetworkConfig.preset("core-edge")
+    ref = run_experiment(algo, CFG, tiny_ds, net=net, engine=engine, **KW)
+    uni = run_experiment(algo, CFG, tiny_ds, net=net, engine=engine,
+                         topo=TopoConfig(), **KW)
+    _assert_runs_identical(ref, uni)
+
+
+def test_uniform_policy_parity_without_netsim(tiny_ds):
+    ref = run_experiment("el", CFG, tiny_ds, **KW)
+    uni = run_experiment("el", CFG, tiny_ds, topo=TopoConfig(), **KW)
+    _assert_runs_identical(ref, uni)
+
+
+# ------------------------------------------- adaptive engine == legacy ---
+@pytest.mark.parametrize("algo", ALL_ALGOS)
+def test_adaptive_engine_matches_legacy_bitforbit(algo, tiny_ds):
+    """The TopoState EWMAs ride the donated scan carry in the engine and
+    a Python variable in the legacy loop — both must advance identically
+    (the same ``repro.topo.advance``/``sample`` calls, like netsim's
+    shared ``advance_conditions``)."""
+    net = NetworkConfig.preset("core-edge")
+    eng = run_experiment(algo, CFG, tiny_ds, net=net, topo=ADAPTIVE,
+                         engine=True, **KW)
+    leg = run_experiment(algo, CFG, tiny_ds, net=net, topo=ADAPTIVE,
+                         engine=False, **KW)
+    _assert_runs_identical(eng, leg)
+
+
+def test_adaptive_runs_under_every_v2_preset(tiny_ds):
+    for preset in ("bursty-wan", "core-edge", "edge-v2"):
+        res = run_experiment("facade", CFG, tiny_ds,
+                             net=NetworkConfig.preset(preset),
+                             topo=ADAPTIVE, **KW)
+        assert np.isfinite(res.comm.bytes[-1])
+        assert np.isfinite(res.comm.seconds[-1])
+        assert all(np.isfinite(a) for a in res.final_acc)
+        assert res.node_acc is not None and len(res.node_acc) == 4
+
+
+def test_adaptive_without_netsim_counts_actual_bytes(tiny_ds):
+    """With no netsim, the legacy path reports the nominal n*degree byte
+    count; an adaptive policy draws a varying graph, so its bytes must
+    count the real directed edges instead (and never exceed nominal by
+    construction of the edge budget)."""
+    ref = run_experiment("el", CFG, tiny_ds, **KW)
+    ada = run_experiment("el", CFG, tiny_ds, topo=ADAPTIVE, **KW)
+    assert ada.comm.bytes[-1] <= ref.comm.bytes[-1]
+    assert ada.comm.bytes[-1] > 0
+
+
+def test_comm_info_actual_flag():
+    n = 4
+    adj = jnp.asarray(topology.ring(n, 2))
+    nominal = comm_info(None, adj, 100.0, n * 2)
+    actual = comm_info(None, adj, 100.0, n * 2, actual=True)
+    assert float(nominal["round_bytes"]) == n * 2 * 100.0
+    assert float(actual["round_bytes"]) == float(adj.sum()) * 100.0
+
+
+# ---------------------------------------------------- sampler contract ---
+def test_sample_structural_invariants():
+    cfg = TopoConfig(policy="reliability", min_inclusion=0.2)
+    n = 12
+    for r in (1, 2, 4, 5):
+        for seed in range(4):
+            state = _hostile_state(n, weak=seed % n)
+            adj = np.asarray(topo_mod.sample(
+                cfg, state, jax.random.PRNGKey(seed), n, r))
+            kpick = max(1, r // 2)
+            assert np.array_equal(adj, adj.T)
+            assert np.all(np.diag(adj) == 0)
+            assert set(np.unique(adj)) <= {0.0, 1.0}
+            # edge budget: never more undirected edges than the legacy
+            # r-regular draw spends (each row contributes <= kpick picks)
+            assert adj.sum() <= 2 * n * kpick
+
+
+def test_sample_deterministic_in_key():
+    cfg = TopoConfig(policy="bandwidth", min_inclusion=0.3)
+    state = _hostile_state(8, weak=3)
+    a = topo_mod.sample(cfg, state, jax.random.PRNGKey(7), 8, 4)
+    b = topo_mod.sample(cfg, state, jax.random.PRNGKey(7), 8, 4)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_participation_floor_is_exact_under_hostile_scores():
+    """The deterministic fairness guarantee: participation probability
+    >= min_inclusion for EVERY node no matter the scores — including the
+    all-zero matrix, where score normalization could divide by zero."""
+    n = 10
+    for floor in (0.0, 0.1, 0.25, 0.9, 1.0):
+        cfg = TopoConfig(policy="reliability", min_inclusion=floor)
+        for state in (_hostile_state(n, weak=2),
+                      TopoState(delivery=jnp.zeros((n, n)),
+                                link_s=jnp.ones((n, n)))):
+            p = np.asarray(topo_mod.participation_probs(cfg, state))
+            assert np.all(p >= floor - 1e-7)
+            assert np.all(p <= 1.0 + 1e-7)
+    # and the best-connected node always participates
+    cfg = TopoConfig(policy="reliability", min_inclusion=0.2)
+    p = np.asarray(topo_mod.participation_probs(
+        cfg, _hostile_state(n, weak=2)))
+    assert p.max() == pytest.approx(1.0, abs=1e-6)
+
+
+def test_starved_node_inclusion_frequency_meets_floor():
+    """Empirical twin of the exact guarantee: over many rounds with a
+    hostile score matrix, the starved node still lands in the graph at
+    ~min_inclusion frequency (binomial tolerance), while without a floor
+    it would vanish."""
+    n, r, rounds, floor = 10, 4, 400, 0.25
+    cfg = TopoConfig(policy="reliability", min_inclusion=floor)
+    state = _hostile_state(n, weak=0)
+    included = np.zeros(n)
+    for rnd in range(rounds):
+        adj = np.asarray(topo_mod.sample(
+            cfg, state, jax.random.fold_in(jax.random.PRNGKey(0), rnd),
+            n, r))
+        included += adj.sum(1) > 0
+    freq = included / rounds
+    sigma = np.sqrt(floor * (1 - floor) / rounds)
+    assert freq[0] >= floor - 3 * sigma
+    # the healthy nodes participate (almost) always
+    assert freq[1:].min() > 0.9
+
+
+def test_topo_degree_budget_override(tiny_ds):
+    """``TopoConfig.degree`` overrides the run degree for EVERY
+    algorithm's adaptive sampler (including DAC, which routes through
+    the shared ``gumbel_graph`` pipeline), and the sampler's edge budget
+    follows the override."""
+    assert topo_mod.budget(None, 2) == 2
+    assert topo_mod.budget(TopoConfig(), 2) == 2
+    override = TopoConfig(policy="reliability", degree=3, min_inclusion=0.2)
+    assert topo_mod.budget(override, 2) == 3
+    n = 12
+    state = _hostile_state(n, weak=1)
+    wide = TopoConfig(policy="reliability", degree=8, min_inclusion=1.0)
+    adj = np.asarray(topo_mod.sample(wide, state, jax.random.PRNGKey(0),
+                                     n, 2))
+    assert adj.sum() <= 2 * n * 4            # budget follows the override
+    assert adj.sum() > 2 * n * 1             # ...and actually uses it
+    for algo in ("dac", "el"):
+        res = run_experiment(algo, CFG, tiny_ds, topo=override,
+                             net=NetworkConfig.preset("core-edge"), **KW)
+        assert np.isfinite(res.comm.bytes[-1])
+
+
+def test_inclusion_stats_on_core_edge():
+    net = NetworkConfig.preset("core-edge")
+    cfg = TopoConfig(policy="reliability", min_inclusion=0.3)
+    st = inclusion_stats(cfg, net, n=10, rounds=300, degree=4)
+    assert st["symmetric"] and st["binary"]
+    assert st["mean_edges"] <= st["edge_budget"]
+    sigma = np.sqrt(0.3 * 0.7 / 300)
+    assert st["inclusion"].min() >= 0.3 - 3 * sigma
+    assert st["participation"].min() >= 0.3 - 3 * sigma
+    with pytest.raises(ValueError, match="adaptive"):
+        inclusion_stats(TopoConfig(), net, n=10, rounds=10, degree=4)
+
+
+# ------------------------------------------------------- EWMA learning ---
+def test_advance_learns_the_simulated_network():
+    """Rolling the EWMAs under core-edge conditions must separate the
+    tiers: links touching an edge node end up with a larger learned
+    link-time than core-core links, and delivery stays a valid rate."""
+    net = NetworkConfig.preset("core-edge", seed=5)
+    cfg = TopoConfig(policy="reliability", decay=0.7)
+    n = 12
+    state = topo_mod.init_state(cfg, net, n)
+    chan = netsim.init_channel(net, n)
+    for rnd in range(40):
+        conds, chan = netsim.advance_conditions(net, n, rnd, chan)
+        state = topo_mod.advance(cfg, net, state, conds)
+    tiers = np.asarray(netsim.node_tiers(net, n))
+    assert 0 < tiers.sum() < n                    # both tiers present
+    link_s = np.asarray(state.link_s)
+    delivery = np.asarray(state.delivery)
+    np.testing.assert_array_equal(link_s, link_s.T)
+    assert np.all(np.diag(link_s) == 0) and np.all(np.diag(delivery) == 0)
+    off = ~np.eye(n, dtype=bool)
+    assert np.all(delivery[off] >= 0) and np.all(delivery[off] <= 1)
+    core = np.where(tiers == 0)[0]
+    edge = np.where(tiers == 1)[0]
+    core_core = link_s[np.ix_(core, core)][~np.eye(len(core), dtype=bool)]
+    edge_any = link_s[edge]                   # every link touching an edge
+    edge_any = edge_any[edge_any > 0]         # node (drop the zero diag)
+    assert edge_any.mean() > core_core.mean() * 2
+
+
+def test_advance_is_noop_without_conditions():
+    cfg = TopoConfig(policy="reliability")
+    state = topo_mod.init_state(cfg, None, 6)
+    assert topo_mod.advance(cfg, None, state, None) is state
+    assert topo_mod.init_state(TopoConfig(), None, 6) is None
+    assert topo_mod.init_state(None, None, 6) is None
+
+
+# ---------------------------------------------------------- validation ---
+def test_topoconfig_validation():
+    with pytest.raises(ValueError, match="policy"):
+        TopoConfig(policy="psychic")
+    with pytest.raises(ValueError, match="min_inclusion"):
+        TopoConfig(min_inclusion=1.5)
+    with pytest.raises(ValueError, match="decay"):
+        TopoConfig(decay=1.0)
+
+
+def test_out_of_range_degree_raises():
+    """Regression: builders used to silently collapse multi-edges when
+    degree >= n — now they fail loudly, as does run_experiment."""
+    key = jax.random.PRNGKey(0)
+    topology.random_regular(key, 4, 3)                # n-1 is fine
+    for bad in (0, 4, 7):
+        with pytest.raises(ValueError, match="degree"):
+            topology.random_regular(key, 4, bad)
+        with pytest.raises(ValueError, match="degree"):
+            topology.ring(4, bad)
+
+
+def test_run_experiment_rejects_out_of_range_degree(tiny_ds):
+    kw = {k: v for k, v in KW.items() if k != "degree"}
+    with pytest.raises(ValueError, match="degree"):
+        run_experiment("el", CFG, tiny_ds, degree=tiny_ds.n_nodes, **kw)
+    with pytest.raises(ValueError, match="degree"):
+        run_experiment("el", CFG, tiny_ds, degree=0, **kw)
+    with pytest.raises(ValueError, match="degree"):
+        # the TopoConfig degree override is validated too
+        run_experiment("el", CFG, tiny_ds, degree=2,
+                       topo=TopoConfig(policy="reliability",
+                                       degree=tiny_ds.n_nodes), **kw)
+
+
+# ------------------------------------------------------ cache-key pins ---
+# Every TopoConfig field must perturb the EngineSpec key (the topo config
+# IS a key component); the table below must track the dataclass exactly,
+# so a new knob without an entry fails the completeness check. Mirrors
+# the NetworkConfig contract in tests/test_property.py, but hypothesis-
+# free so it runs everywhere.
+_TOPO_PERTURB = {
+    "policy": lambda v: "reliability" if v != "reliability" else "bandwidth",
+    "decay": lambda v: (v + 0.1) % 1.0,
+    "degree": lambda v: 3 if v is None else v + 1,
+    "min_inclusion": lambda v: (v + 0.05) % 1.0,
+    "ref_payload_bytes": lambda v: v + 1.0,
+    "seed": lambda v: v + 1,
+}
+
+
+def test_topo_perturb_covers_every_topoconfig_field():
+    fields = {f.name for f in dataclasses.fields(TopoConfig)}
+    assert fields == set(_TOPO_PERTURB)
+
+
+def test_every_topoconfig_field_forks_the_cache_key():
+    def spec(topo):
+        return EngineSpec(algo="el", cfg=CFG, n=4, k=2, degree=2,
+                          local_steps=2, batch_size=4, lr=0.05, topo=topo)
+
+    base_topo = TopoConfig(policy="reliability")
+    base = spec(base_topo)
+    assert base == spec(TopoConfig(policy="reliability"))
+    assert spec(None) != base                  # topo on/off forks
+    assert spec(None) != spec(TopoConfig())    # uniform config still keys
+    for field, perturb in _TOPO_PERTURB.items():
+        mutated = spec(dataclasses.replace(
+            base_topo, **{field: perturb(getattr(base_topo, field))}))
+        assert mutated != base, field
+        table = {base: "b", mutated: "m"}
+        assert table[base] == "b" and table[mutated] == "m"
