@@ -63,6 +63,18 @@ def save(name: str, payload: dict) -> pathlib.Path:
     return out
 
 
+def write_bench(name: str, payload: dict) -> pathlib.Path:
+    """The one way a benchmark writes its ``BENCH_<name>.json``: stamps a
+    ``manifest`` block (payload content fingerprint + jax version +
+    timestamp, :func:`repro.obs.bench_stamp`) so every benchmark artifact
+    records what exactly produced it, then routes through :func:`save`."""
+    from repro.obs import bench_stamp
+
+    payload = dict(payload)
+    payload["manifest"] = bench_stamp(name, payload)
+    return save(f"BENCH_{name}", payload)
+
+
 def table(headers, rows) -> str:
     w = [max(len(str(h)), *(len(str(r[i])) for r in rows)) if rows
          else len(str(h)) for i, h in enumerate(headers)]

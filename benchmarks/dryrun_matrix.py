@@ -100,13 +100,28 @@ def run(quick: bool = True) -> dict:
               f"{topo_rec['uniform_bytes']/1e3:.1f} KB, min inclusion "
               f"{topo_rec['min_inclusion_freq']:.2f})")
 
+    # obs smoke: full telemetry attached to a tiny run — trajectory
+    # parity, finite round-complete frames, JSONL round-trip; reported,
+    # never aborts the table
+    try:
+        from . import obs_overhead
+        obs_rec = obs_overhead.smoke()
+    except Exception as e:
+        obs_rec = {"status": "fail", "error": repr(e)}
+        print(f"obs smoke: FAIL ({e!r})")
+    else:
+        print(f"obs smoke: {obs_rec['status']} "
+              f"({obs_rec['frames']} frames, "
+              f"{obs_rec['jsonl_records']} JSONL records, spans "
+              f"{obs_rec['spans']})")
+
     recs = [r for r in load("dryrun_*.jsonl") if r.get("tag", "") == ""]
     if not recs:
         print("no dry-run records; run `python -m repro.launch.dryrun --all` "
               "(and --multi-pod) first")
         return {"netsim_smoke": net_rec, "netsim_v2_smoke": v2_rec,
                 "engine_smoke": eng_rec, "sweep_smoke": sweep_rec,
-                "topo_smoke": topo_rec}
+                "topo_smoke": topo_rec, "obs_smoke": obs_rec}
     rows = []
     ok = fail = skip = 0
     for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
@@ -133,7 +148,7 @@ def run(quick: bool = True) -> dict:
     payload = {"n_ok": ok, "n_fail": fail, "n_skip": skip, "records": recs,
                "netsim_smoke": net_rec, "netsim_v2_smoke": v2_rec,
                "engine_smoke": eng_rec, "sweep_smoke": sweep_rec,
-               "topo_smoke": topo_rec}
+               "topo_smoke": topo_rec, "obs_smoke": obs_rec}
     common.save("dryrun_matrix", payload)
     return payload
 

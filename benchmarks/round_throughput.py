@@ -149,7 +149,7 @@ def run(quick: bool = True) -> dict:
                "batch_size": BATCH, "results": results,
                "min_speedup": min(r["speedup"] for r in results.values()),
                "cache": cache.stats()}
-    out = common.save("BENCH_throughput", payload)
+    out = common.write_bench("throughput", payload)
     print(f"wrote {out} (min speedup {payload['min_speedup']:.2f}x)")
     return payload
 

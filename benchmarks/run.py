@@ -12,8 +12,9 @@ import time
 
 from . import (churn_resilience, color_shift, comm_cost, dryrun_matrix,
                fair_accuracy, fairness_dp_eo, k_sensitivity, kernel_bench,
-               label_skew, percluster_accuracy, round_throughput, seed_sweep,
-               settlement, topo_adapt, warmup_ablation)
+               label_skew, obs_overhead, percluster_accuracy,
+               round_throughput, seed_sweep, settlement, topo_adapt,
+               warmup_ablation)
 
 SUITES = {
     "percluster_accuracy": percluster_accuracy,   # Fig. 3 / Tab. II
@@ -29,6 +30,7 @@ SUITES = {
     "topo_adapt": topo_adapt,                     # adaptive topology policies
     "round_throughput": round_throughput,         # segment engine rounds/sec
     "seed_sweep": seed_sweep,                     # compile-cache sweep vs naive
+    "obs_overhead": obs_overhead,                 # in-scan telemetry cost
     "kernel_bench": kernel_bench,                 # kernels (systems)
     "dryrun_matrix": dryrun_matrix,               # §Dry-run / §Roofline
 }

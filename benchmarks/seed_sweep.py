@@ -91,7 +91,11 @@ def run(quick: bool = True) -> dict:
         "speedup": speedup,
         "results": results,
     }
-    out = common.save("BENCH_sweep", payload)
+    out = common.write_bench("sweep", payload)
+    st = shared.stats()
+    print(f"cache: {st['entries']} entries, {st['hits']} hits / "
+          f"{st['misses']} misses, {st['compiles']} compiles "
+          f"({st['evaluator_builds']} evaluator builds)")
     print(f"wrote {out} (naive {t_naive:.1f}s / sweep {t_sweep:.1f}s = "
           f"{speedup:.2f}x, {recompiles} recompiles after first run)")
     return payload

@@ -139,7 +139,7 @@ def run(quick: bool = True) -> dict:
           f"{uni['seconds_to_target']:.1f}s -> reliability "
           f"{rel['seconds_to_target']:.1f}s "
           f"({payload['speedup_core_edge']:.2f}x)")
-    common.save("BENCH_topo", payload)
+    common.write_bench("topo", payload)
     return payload
 
 

@@ -33,7 +33,11 @@ field: they live on the frozen ``NetworkConfig``, which is already the
 perturbing ANY ``NetworkConfig`` field forks the key. The adaptive
 topology policy is the ``topo`` component (a frozen
 ``repro.topo.TopoConfig`` or ``None``) with the same every-field-forks
-contract, pinned the same way.
+contract, pinned the same way. In-scan telemetry is the ``obs``
+component (a frozen ``repro.obs.ObsConfig`` or ``None``): its fields
+change the compiled segment program's OUTPUTS (the MetricsFrame scan
+leaf), so they fork the key too — while host-side sinks/tracers never
+do (``tests/test_obs.py`` pins both directions).
 
 Donation caveat: segment programs donate their input :class:`EngineCarry`
 buffers. Reusing a cached engine across runs is safe precisely because
@@ -75,6 +79,13 @@ class EngineSpec:
     net: Any = None              # NetworkConfig | None
     eval_batch: int = 256        # make_evaluator batch size
     topo: Any = None             # repro.topo.TopoConfig | None
+    obs: Any = None              # repro.obs.ObsConfig | None — the
+    #                              DEVICE-side telemetry spec: an enabled
+    #                              MetricsFrame adds scan outputs, i.e. a
+    #                              different compiled segment program, so
+    #                              it must fork the key. Host-side sink /
+    #                              tracer / profiler settings (repro.obs.
+    #                              Obs) deliberately never appear here.
 
 
 _FP_MEMO: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
@@ -133,7 +144,8 @@ class CacheEntry:
             net=spec.net, n=spec.n, local_steps=spec.local_steps,
             batch_size=spec.batch_size,
             track_cluster=self.program.track_cluster,
-            mixable_of=self.program.mixable_of, topo=spec.topo)
+            mixable_of=self.program.mixable_of, topo=spec.topo,
+            obs=spec.obs)
 
     def setup(self, key):
         return self.program.setup(key)

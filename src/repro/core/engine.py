@@ -29,6 +29,7 @@ granularity — exactly the rounds where the legacy driver evaluated.
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Callable, NamedTuple
 
 import jax
@@ -37,9 +38,17 @@ import jax.numpy as jnp
 from repro import netsim
 from repro import topo as topo_mod
 from repro.data import pipeline
+from repro.obs import frame as obs_frame
 
 from .netwire import round_seconds
 from .state import EngineCarry
+
+
+def _sp(tracer, name, **attrs):
+    """Tracer span or no-op — the engine never requires an ``Obs``."""
+    if tracer is None:
+        return contextlib.nullcontext()
+    return tracer.span(name, **attrs)
 
 
 class Segment(NamedTuple):
@@ -86,11 +95,17 @@ class SegmentEngine:
     def __init__(self, round_fn: Callable, *, n: int, local_steps: int,
                  batch_size: int, net=None, warmup_fn: Callable | None = None,
                  track_cluster: bool = False, mixable_of: Callable | None = None,
-                 topo=None):
+                 topo=None, obs=None):
         self._round = round_fn
         self._warm = warmup_fn if warmup_fn is not None else round_fn
         self._net = net
         self._topo = topo           # repro.topo.TopoConfig | None (static)
+        self._obs = obs             # repro.obs.ObsConfig | None (static):
+        #                             when set, every scanned round also
+        #                             emits a MetricsFrame — an extra out
+        #                             leaf stacked [length, ...], drained
+        #                             in the segment's one device_get
+        self._tiers = obs_frame.tiers_of(net, n) if obs is not None else None
         self._n = n
         self._h = local_steps
         self._b = batch_size
@@ -131,10 +146,12 @@ class SegmentEngine:
         round_fn = self._warm if warmup else self._round
         net, n, h, b, track = self._net, self._n, self._h, self._b, self._track
         mixable_of, tcfg = self._mixable_of, self._topo
+        ocfg, tiers = self._obs, self._tiers
+        mix_of = mixable_of if mixable_of is not None else (lambda s: s)
 
         def segment(carry, start, train_x, train_y):
             def step(carry, rnd):
-                state, k_data, chan, gossip, topo = carry
+                prev_state, k_data, chan, gossip, topo = carry
                 k_data, k_b = jax.random.split(k_data)
                 batches = pipeline.sample_round_batches(
                     k_b, train_x, train_y, h, b)
@@ -143,7 +160,7 @@ class SegmentEngine:
                     conds, chan = netsim.advance_conditions(net, n, rnd,
                                                             chan)
                     conds, published = netsim.apply_async(net, conds, gossip)
-                state, info = round_fn(state, batches, net=conds,
+                state, info = round_fn(prev_state, batches, net=conds,
                                        gossip=published, topo=topo)
                 if published is not None:
                     gossip = netsim.fold_gossip(net, gossip, conds,
@@ -156,6 +173,12 @@ class SegmentEngine:
                        "round_s": round_seconds(net, info, conds, h)}
                 if track:
                     out["cluster_id"] = info["cluster_id"]
+                if ocfg is not None:
+                    out["frame"] = obs_frame.compute_frame(
+                        ocfg, n, tiers, mix_of(prev_state), mix_of(state),
+                        getattr(prev_state, "cluster_id", None),
+                        getattr(state, "cluster_id", None), info, conds,
+                        gossip)
                 return EngineCarry(state, k_data, chan, gossip, topo), out
 
             rnds = start + jnp.arange(length, dtype=jnp.int32)
@@ -164,12 +187,17 @@ class SegmentEngine:
         return jax.jit(segment, donate_argnums=(0,))
 
     def run_segment(self, carry: EngineCarry, start: int, length: int,
-                    train_x, train_y, warmup: bool = False):
+                    train_x, train_y, warmup: bool = False, tracer=None):
         """Advance ``length`` rounds in one dispatch.
 
         Returns ``(new_carry, outs)`` where ``outs`` is a dict of host
         numpy arrays with leading axis ``length`` — the segment's only
-        device->host transfer.
+        device->host transfer. ``tracer``: optional
+        :class:`repro.obs.Tracer` — wraps the call in ``compile`` (first
+        trace of this program) or ``dispatch`` spans and the bulk
+        ``device_get`` in a ``drain`` span. Dispatch is async, so the
+        drain span absorbs device compute + transfer — exactly the
+        serialization ROADMAP Open Item 5(b) wants to pipeline away.
         """
         key = (length, warmup)
         fn = self._compiled.get(key)
@@ -177,9 +205,14 @@ class SegmentEngine:
             fn = self._compiled[key] = self._build(length, warmup)
         trace_key = key + tuple((a.shape, str(a.dtype))
                                 for a in (train_x, train_y))
-        if trace_key not in self._traced:
+        fresh = trace_key not in self._traced
+        if fresh:
             self._traced.add(trace_key)
             self.compile_count += 1
-        carry, outs = fn(carry, jnp.asarray(start, jnp.int32),
-                         train_x, train_y)
-        return carry, jax.device_get(outs)
+        with _sp(tracer, "compile" if fresh else "dispatch",
+                 length=length, warmup=warmup):
+            carry, outs = fn(carry, jnp.asarray(start, jnp.int32),
+                             train_x, train_y)
+        with _sp(tracer, "drain", length=length):
+            outs = jax.device_get(outs)
+        return carry, outs

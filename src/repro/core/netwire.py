@@ -55,17 +55,23 @@ def comm_info(net, adj_eff, payload_bytes, nominal_sends, actual=False):
     gossip, edges out of a stale node carry no NEW bytes (neighbors
     reuse its cached snapshot), so its rows are excluded.
     """
+    payload = jnp.asarray(payload_bytes, jnp.float32)
     if net is None:
+        # adj_eff/payload ride along for telemetry (repro.obs frames)
+        # even off-netsim; round_bytes keeps its historical definition
+        # on every path, and unconsumed extras are dead code to XLA
         if actual:
-            return {"round_bytes": adj_eff.sum() * payload_bytes}
+            return {"round_bytes": adj_eff.sum() * payload_bytes,
+                    "adj_eff": adj_eff, "payload_bytes": payload}
         return {"round_bytes": jnp.asarray(
-            nominal_sends * payload_bytes, jnp.float32)}
+            nominal_sends * payload_bytes, jnp.float32),
+            "adj_eff": adj_eff, "payload_bytes": payload}
     sends = adj_eff
     if net.stale is not None:
         sends = adj_eff * (1.0 - net.stale)[:, None]
     return {"round_bytes": sends.sum() * payload_bytes,
             "adj_eff": adj_eff,
-            "payload_bytes": jnp.asarray(payload_bytes, jnp.float32)}
+            "payload_bytes": payload}
 
 
 def round_seconds(net, info, conds, local_steps: int):

@@ -21,6 +21,7 @@ private fresh cache, i.e. exactly the historical per-call behavior.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 from typing import Any, Callable, NamedTuple
@@ -34,6 +35,7 @@ from repro.data import pipeline
 from repro.fairness import demographic_parity, equalized_odds, fair_accuracy
 from repro.models import cnn as cnn_mod
 from repro import netsim
+from repro import obs as obs_mod
 from repro import topo as topo_mod
 
 from . import facade as facade_mod
@@ -43,7 +45,7 @@ from .baselines import (DACConfig, DeprlConfig, DpsgdConfig, ELConfig,
                         init_dac_extra)
 from .bindings import Binding
 from .cache import EngineCache, EngineSpec
-from .engine import segment_plan
+from .engine import _sp, segment_plan
 from .state import EngineCarry, init_baseline_state, init_facade_state
 
 
@@ -265,6 +267,7 @@ def run_experiment(algo: str, cfg, dataset, *, rounds: int, k: int | None = None
                    engine: bool = True,
                    cache: EngineCache | None = None,
                    eval_batch: int = 256,
+                   obs: "obs_mod.Obs | None" = None,
                    verbose: bool = False) -> RunResult:
     """Run one (algorithm, dataset) experiment end to end (CNN models).
 
@@ -289,6 +292,13 @@ def run_experiment(algo: str, cfg, dataset, *, rounds: int, k: int | None = None
     once (see :mod:`repro.sweep`). ``None`` (the default) uses a fresh
     private cache, which is bit-identical to the historical
     build-everything-per-call behavior.
+
+    ``obs``: optional :class:`repro.obs.Obs` — in-scan per-round metric
+    frames (when ``obs.config`` is set), nested tracer spans around
+    compile / dispatch / drain / eval, cache hit/miss events, and a
+    :class:`repro.obs.RunManifest` at the end of the run. ``None`` is
+    bit-for-bit the untelemetered path; an attached ``Obs`` never
+    perturbs the trajectory either (telemetry is pure observation).
     """
     if target_acc is not None and eval_every > rounds:
         raise ValueError(
@@ -314,40 +324,73 @@ def run_experiment(algo: str, cfg, dataset, *, rounds: int, k: int | None = None
     train_y = jnp.asarray(dataset.train_y)
 
     cache = cache if cache is not None else EngineCache()
+    tracer = obs.tracer if obs is not None else None
     spec = EngineSpec(
         algo=algo, cfg=cfg, n=n, k=k, degree=degree,
         local_steps=local_steps, batch_size=batch_size, lr=lr,
         warmup_rounds=warmup_rounds, head_jitter=head_jitter, net=net,
-        eval_batch=eval_batch, topo=topo)
-    entry = cache.entry(spec)
+        eval_batch=eval_batch, topo=topo,
+        obs=obs.config if obs is not None else None)
+    if obs is not None:
+        obs.begin_run(algo=algo, seed=seed, rounds=rounds, engine=engine)
+    misses0 = cache.misses
+    with _sp(tracer, "cache.entry", algo=algo):
+        entry = cache.entry(spec)
+    if tracer is not None:
+        tracer.event("cache.miss" if cache.misses > misses0
+                     else "cache.hit", algo=algo, seed=seed)
+    builds0 = cache.evaluator_builds
     setup = entry.setup(k_init)
     evaluator = cache.evaluator(entry.binding, dataset,
                                 batch=spec.eval_batch)
+    if tracer is not None and cache.evaluator_builds > builds0:
+        tracer.event("evaluator.build", batch=spec.eval_batch)
     hist = _History(dataset.node_cluster, n, evaluator, setup.models_of,
                     target_acc, verbose, algo, entry.binding.cfg.n_classes)
-    if engine:
-        _drive_engine(entry.engine, setup, hist, k_data, train_x, train_y,
-                      rounds=rounds, eval_every=eval_every,
-                      warmup_rounds=warmup_rounds)
-    else:
-        _drive_legacy(setup, hist, k_data, train_x, train_y, rounds=rounds,
-                      eval_every=eval_every, warmup_rounds=warmup_rounds,
-                      local_steps=local_steps, batch_size=batch_size,
-                      net=net, n=n, topo=topo)
+    prof = obs.profile() if obs is not None else contextlib.nullcontext()
+    with prof, _sp(tracer, "run", algo=algo, seed=seed, engine=engine):
+        if engine:
+            _drive_engine(entry.engine, setup, hist, k_data, train_x,
+                          train_y, rounds=rounds, eval_every=eval_every,
+                          warmup_rounds=warmup_rounds, obs=obs)
+        else:
+            _drive_legacy(setup, hist, k_data, train_x, train_y,
+                          rounds=rounds, eval_every=eval_every,
+                          warmup_rounds=warmup_rounds,
+                          local_steps=local_steps, batch_size=batch_size,
+                          net=net, n=n, topo=topo, obs=obs)
+    if obs is not None:
+        obs.end_run(obs_mod.RunManifest.build(
+            kind="run", name=f"{algo}-seed{seed}", spec=spec,
+            settings={"rounds": rounds, "eval_every": eval_every,
+                      "engine": engine, "seed": seed, "net": repr(net),
+                      "topo": repr(topo), "obs": repr(obs.config)},
+            timing=obs.tracer.rollup(), cache=cache.stats()))
     return hist.result(algo)
 
 
 # --------------------------------------------------------------------------
 def _drive_engine(eng, setup: AlgoSetup, hist: _History, k_data,
-                  train_x, train_y, *, rounds, eval_every, warmup_rounds):
+                  train_x, train_y, *, rounds, eval_every, warmup_rounds,
+                  obs=None):
     """Segment-engine driver: one dispatch + one host transfer per span.
     ``eng`` comes from the run's :class:`EngineCache` entry, so repeated
-    runs of one config reuse its compiled segment programs."""
+    runs of one config reuse its compiled segment programs. ``obs``: the
+    run's :class:`repro.obs.Obs` — its tracer instruments every segment
+    (compile/dispatch/drain spans) and eval, and the segment's stacked
+    ``MetricsFrame`` (already drained in the one bulk ``device_get``) is
+    handed over whole — on a ``target_acc`` hit the full segment is
+    recorded (frames are pure observation; the early exit only truncates
+    the comm/cluster histories, matching the legacy loop's break)."""
+    tracer = obs.tracer if obs is not None else None
     carry = eng.init_carry(setup.state, k_data)
     for seg in segment_plan(rounds, eval_every, warmup_rounds):
         carry, outs = eng.run_segment(carry, seg.start, seg.length,
-                                      train_x, train_y, warmup=seg.warmup)
+                                      train_x, train_y, warmup=seg.warmup,
+                                      tracer=tracer)
         rnds = np.arange(seg.start + 1, seg.start + seg.length + 1)
+        if obs is not None and "frame" in outs:
+            obs.record_frames(rnds, outs["frame"])
         hit = False
         if seg.eval_at_end:
             hist.comm.record_bulk(rnds[:-1], outs["round_bytes"][:-1],
@@ -356,9 +399,10 @@ def _drive_engine(eng, setup: AlgoSetup, hist: _History, k_data,
             if seg.start + seg.length == rounds:
                 state = setup.finalize(state)
                 carry = carry._replace(state=state)
-            hit = hist.eval_round(state, int(rnds[-1]),
-                                  float(outs["round_bytes"][-1]),
-                                  float(outs["round_s"][-1]))
+            with _sp(tracer, "eval", round=int(rnds[-1])):
+                hit = hist.eval_round(state, int(rnds[-1]),
+                                      float(outs["round_bytes"][-1]),
+                                      float(outs["round_s"][-1]))
         else:
             hist.comm.record_bulk(rnds, outs["round_bytes"],
                                   outs["round_s"])
@@ -375,12 +419,18 @@ def _drive_engine(eng, setup: AlgoSetup, hist: _History, k_data,
 
 def _drive_legacy(setup: AlgoSetup, hist: _History, k_data, train_x, train_y,
                   *, rounds, eval_every, warmup_rounds, local_steps,
-                  batch_size, net, n, topo=None):
+                  batch_size, net, n, topo=None, obs=None):
     """Legacy per-round driver: eager sampling, one jitted dispatch per
     round, per-round host syncs. Kept as the engine's parity reference and
     the benchmark baseline. ``topo`` is the static TopoConfig; its EWMA
     state is threaded through Python and advanced by the SAME
-    ``repro.topo.advance`` the engine scans over."""
+    ``repro.topo.advance`` the engine scans over. ``obs``: frames come
+    from the SAME :func:`repro.obs.compute_frame` the engine scans over,
+    at the same point in the round (after ``fold_gossip`` and the topo
+    advance, before ``finalize``), so engine and legacy frames agree
+    bit-for-bit like the trajectories do."""
+    tracer = obs.tracer if obs is not None else None
+    ocfg = obs.config if obs is not None else None
     round_main = jax.jit(setup.round_fn)
     round_warm = jax.jit(setup.warmup_fn)
     chan = gossip = None
@@ -395,6 +445,17 @@ def _drive_legacy(setup: AlgoSetup, hist: _History, k_data, train_x, train_y,
             netwire.round_seconds, net, local_steps=local_steps))
         chan = netsim.init_channel(net, n)
         gossip = netsim.init_gossip(net, n, setup.mixable_of(setup.state))
+    frame_fn = None
+    if ocfg is not None:
+        tiers = obs_mod.tiers_of(net, n)
+        mix_of = setup.mixable_of
+
+        @jax.jit
+        def frame_fn(prev, state, info, conds, gossip):
+            return obs_mod.compute_frame(
+                ocfg, n, tiers, mix_of(prev), mix_of(state),
+                getattr(prev, "cluster_id", None),
+                getattr(state, "cluster_id", None), info, conds, gossip)
 
     state = setup.state
     for rnd in range(rounds):
@@ -405,14 +466,20 @@ def _drive_legacy(setup: AlgoSetup, hist: _History, k_data, train_x, train_y,
         if net is not None:
             conds, chan = conds_fn(rnd, chan)
             conds, published = netsim.apply_async(net, conds, gossip)
+        prev = state
         fn = round_warm if rnd < warmup_rounds else round_main
-        state, info = fn(state, batches, net=conds, gossip=published,
+        state, info = fn(prev, batches, net=conds, gossip=published,
                          topo=tstate)
         if published is not None:
             gossip = netsim.fold_gossip(net, gossip, conds,
                                         setup.mixable_of(state))
         if topo_fn is not None:
             tstate = topo_fn(tstate, conds)
+        if frame_fn is not None:
+            fr = jax.device_get(frame_fn(prev, state, info, conds, gossip))
+            obs.record_frames(
+                np.asarray([rnd + 1]),
+                jax.tree.map(lambda l: np.asarray(l)[None], fr))
         round_s = 0.0
         if net is not None:
             round_s = float(time_fn(info, conds))
@@ -421,8 +488,10 @@ def _drive_legacy(setup: AlgoSetup, hist: _History, k_data, train_x, train_y,
         if last_round:
             state = setup.finalize(state)
         if (rnd + 1) % eval_every == 0 or last_round:
-            if hist.eval_round(state, rnd + 1, float(info["round_bytes"]),
-                               round_s):
+            with _sp(tracer, "eval", round=rnd + 1):
+                hit = hist.eval_round(state, rnd + 1,
+                                      float(info["round_bytes"]), round_s)
+            if hit:
                 break
         else:
             hist.comm.record(rnd + 1, float(info["round_bytes"]),

@@ -15,10 +15,18 @@ bytes flow through the preset's latency/bandwidth cost model into a
 use), which reports simulated network hours (``total_hours``) and
 simulated seconds to drain 50% / 100% of the request queue
 (``seconds_to_target``).
+
+``--trace-jsonl PATH`` attaches a :class:`repro.obs.Tracer` through the
+SAME JSONL sink format the training drivers use: per-batch ``prefill`` /
+``decode`` spans, ``queue.wait`` events (how long each batch's requests
+sat in the queue before being scheduled) and a final ``slo`` event, so
+serving traces and training traces can be read with one
+:func:`repro.obs.read_jsonl` and joined on ``type``/``name``.
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 
 import jax
@@ -78,7 +86,20 @@ def main(argv=None) -> None:
                     help="netsim preset overlay: report simulated network "
                          "time (CommLog total_hours / seconds_to_target) "
                          "next to the real tok/s")
+    ap.add_argument("--trace-jsonl", default=None,
+                    help="write repro.obs tracer spans (prefill / decode / "
+                         "queue.wait / slo) to this JSONL file")
     args = ap.parse_args(argv)
+
+    tracer = None
+    if args.trace_jsonl:
+        from repro.obs import JsonlSink, Tracer
+        tracer = Tracer(sink=JsonlSink(args.trace_jsonl))
+
+    def _sp(name, **attrs):
+        if tracer is None:
+            return contextlib.nullcontext()
+        return tracer.span(name, **attrs)
 
     cfg = get_config(args.arch, smoke=True)
     if cfg.encoder_layers > 0:
@@ -110,6 +131,12 @@ def main(argv=None) -> None:
     done = 0
     batch_no = 0
     while queue:
+        if tracer is not None:
+            # queue wait: every request arrived at t0, so a batch's wait
+            # is simply how long serving the earlier batches took
+            tracer.event("queue.wait", batch=batch_no,
+                         wait_s=time.time() - t0,
+                         queued=len(queue))
         batch_reqs = [queue.pop(0) for _ in range(min(args.batch, len(queue)))]
         b = len(batch_reqs)
         lens = np.array([len(r) for r in batch_reqs], np.int32)
@@ -117,21 +144,26 @@ def main(argv=None) -> None:
         for i, r in enumerate(batch_reqs):
             toks[i, :len(r)] = r
 
-        logits, cache = prefill_fn(params, jnp.asarray(toks))
+        with _sp("prefill", batch=batch_no, size=b):
+            logits, cache = prefill_fn(params, jnp.asarray(toks))
+            # sample the first token inside the span so it absorbs the
+            # prefill compute (dispatch is async; argmax forces it)
+            last = jnp.argmax(logits, -1).astype(jnp.int32)
+            last.block_until_ready()
         out_tokens = np.zeros((b, args.gen_len), np.int32)
         pos = jnp.asarray(lens)  # next position per request
         # greedy (or sampled) continuation
-        last = jnp.argmax(logits, -1).astype(jnp.int32)
-        for t in range(args.gen_len):
-            out_tokens[:, t] = np.asarray(last)
-            logits, cache = decode_fn(params, cache, last[:, None], pos)
-            if args.temperature > 0:
-                key_t = jax.random.fold_in(key, t)
-                last = jax.random.categorical(
-                    key_t, logits / args.temperature).astype(jnp.int32)
-            else:
-                last = jnp.argmax(logits, -1).astype(jnp.int32)
-            pos = pos + 1
+        with _sp("decode", batch=batch_no, size=b, steps=args.gen_len):
+            for t in range(args.gen_len):
+                out_tokens[:, t] = np.asarray(last)
+                logits, cache = decode_fn(params, cache, last[:, None], pos)
+                if args.temperature > 0:
+                    key_t = jax.random.fold_in(key, t)
+                    last = jax.random.categorical(
+                        key_t, logits / args.temperature).astype(jnp.int32)
+                else:
+                    last = jnp.argmax(logits, -1).astype(jnp.int32)
+                pos = pos + 1
         done += b
         batch_no += 1
         if net is not None:
@@ -161,6 +193,16 @@ def main(argv=None) -> None:
               f"network seconds total ({comm.total_hours:.6f} h, "
               f"{comm.total_gb * 1e3:.3f} MB on the wire); "
               f"p50 queue drain {half:.3f}s, full drain {full:.3f}s")
+    if tracer is not None:
+        tracer.event(
+            "slo", requests=done, tokens=total_tok, wall_s=dt,
+            tok_s=total_tok / dt,
+            net=net.name if net is not None else None,
+            sim_net_s=comm.total_hours * 3600 if net is not None else 0.0,
+            rollup=tracer.rollup()["spans"])
+        tracer.sink.close()
+        print(f"trace: {tracer.sink.n_emitted} records -> "
+              f"{tracer.sink.path}")
 
 
 if __name__ == "__main__":

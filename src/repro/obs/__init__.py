@@ -1,0 +1,119 @@
+"""repro.obs — in-scan telemetry, span tracing and run manifests.
+
+Three layers, composable but independent:
+
+* **device**: :class:`ObsConfig` + :class:`MetricsFrame`
+  (:mod:`.frame`) — a fixed pytree of per-round scalars (update/param
+  norms, cluster switches, delivered edges, per-tier byte split,
+  gossip-staleness histogram, inclusion) computed INSIDE the engine's
+  ``lax.scan`` and drained in the segment's existing single bulk
+  ``device_get`` — zero extra dispatches, zero extra host syncs;
+* **host**: :class:`Tracer` (:mod:`.trace`) — nested spans around
+  compile / segment dispatch / scalar drain / eval, ``EngineCache``
+  hit/miss events, optional ``jax.profiler`` hook;
+* **disk**: :class:`JsonlSink` + :class:`RunManifest` (:mod:`.sink`) —
+  one JSONL record format for training AND serving telemetry, plus a
+  manifest (config fingerprint, spec key, settings, timing rollup)
+  written next to results and stamped into every ``BENCH_*.json``.
+
+Usage — any algorithm, either driver, any netsim/topo combination::
+
+    from repro.core.runner import run_experiment
+    from repro.obs import Obs, ObsConfig
+
+    obs = Obs(ObsConfig(), jsonl="results/obs/run.jsonl",
+              out_dir="results/obs")
+    res = run_experiment("facade", cfg, ds, rounds=100, obs=obs)
+    obs.frames_table()["cluster_switches"]   # per-round settlement curve
+    obs.tracer.rollup()                      # where the wall-clock went
+    obs.manifests[-1].fingerprint            # what exactly ran
+
+``obs=None`` (the default) is bit-for-bit the pre-obs path, and an
+ENABLED frame never perturbs a trajectory either — telemetry is pure
+observation (both pinned in ``tests/test_obs.py`` for all 5 algorithms
+on both drivers). Only :class:`ObsConfig` (the device-side frame spec)
+is an ``EngineSpec`` cache-key component; host-side sink/profiler
+settings on :class:`Obs` never fork the key or recompile anything.
+"""
+from __future__ import annotations
+
+import pathlib
+from typing import Any
+
+import numpy as np
+
+from .frame import (FRAME_FIELDS, MetricsFrame, ObsConfig,  # noqa: F401
+                    compute_frame, tiers_of)
+from .sink import (JsonlSink, RunManifest, bench_stamp,  # noqa: F401
+                   fingerprint, read_jsonl)
+from .trace import Tracer, maybe_profile  # noqa: F401
+
+
+class Obs:
+    """Host-side observability context for one or more runs.
+
+    ``config``: the device-side :class:`ObsConfig` (``None`` = spans and
+    manifests only, no in-scan frame — and no cache-key fork);
+    ``jsonl``/``sink``: where events go (``jsonl`` path builds a
+    :class:`JsonlSink`); ``out_dir``: where per-run manifests are
+    written; ``profile_dir``: optional ``jax.profiler`` trace directory.
+
+    One ``Obs`` may span many runs (a sweep shares one): frames and
+    manifests accumulate, with ``run.begin``/``run.end`` events marking
+    the boundaries in the JSONL stream.
+    """
+
+    def __init__(self, config: "ObsConfig | None" = ObsConfig(), *,
+                 jsonl=None, sink=None, out_dir=None, profile_dir=None):
+        self.config = config
+        self.sink = sink if sink is not None else (
+            JsonlSink(jsonl) if jsonl is not None else None)
+        self.tracer = Tracer(sink=self.sink)
+        self.out_dir = pathlib.Path(out_dir) if out_dir is not None else None
+        self.profile_dir = profile_dir
+        self.frames: list[tuple] = []      # (rounds [m], MetricsFrame [m,...])
+        self.manifests: list[RunManifest] = []
+
+    # -- run lifecycle ------------------------------------------------------
+    def begin_run(self, **attrs: Any) -> None:
+        self.tracer.event("run.begin", **attrs)
+
+    def end_run(self, manifest: RunManifest) -> RunManifest:
+        self.manifests.append(manifest)
+        if self.out_dir is not None:
+            manifest.save(self.out_dir /
+                          f"manifest_{manifest.name}.json")
+        self.tracer.event("run.end", run=manifest.name,
+                          fingerprint=manifest.fingerprint)
+        return manifest
+
+    def profile(self):
+        """Context manager: ``jax.profiler`` trace when ``profile_dir``
+        is set and the profiler works here, else a no-op."""
+        return maybe_profile(self.profile_dir)
+
+    # -- frames -------------------------------------------------------------
+    def record_frames(self, rounds, frame: MetricsFrame) -> None:
+        """Store one drained segment of frames (host numpy, leading axis
+        ``len(rounds)``) and mirror a ``metrics`` record to the sink."""
+        rounds = np.asarray(rounds, np.int64).reshape(-1)
+        frame = MetricsFrame(*(np.asarray(l) for l in frame))
+        self.frames.append((rounds, frame))
+        if self.sink is not None:
+            rec = {"type": "metrics", "rounds": rounds.tolist()}
+            for name, leaf in zip(MetricsFrame._fields, frame):
+                rec[name] = np.asarray(leaf, np.float64).tolist()
+            self.sink.emit(rec)
+
+    def frames_table(self) -> dict:
+        """All recorded frames concatenated: ``{"round": [m], field:
+        [m, ...]}`` across every run this ``Obs`` observed."""
+        if not self.frames:
+            return {"round": np.zeros((0,), np.int64),
+                    **{f: np.zeros((0,)) for f in MetricsFrame._fields}}
+        out = {"round": np.concatenate([r for r, _ in self.frames])}
+        for i, name in enumerate(MetricsFrame._fields):
+            out[name] = np.concatenate(
+                [np.atleast_1d(f[i]) if f[i].ndim == 0 else f[i]
+                 for _, f in self.frames])
+        return out

@@ -1,0 +1,120 @@
+"""Sinks: JSONL event log + the run manifest written next to results.
+
+One line = one JSON record is the single on-disk telemetry format for
+the whole repo: engine spans, cache events, per-segment metric frames
+and serving SLO spans all flow through :class:`JsonlSink`, so any
+driver's trace can be replayed with :func:`read_jsonl` and joined on
+the shared ``type``/``name`` fields.
+
+:class:`RunManifest` is the "what exactly ran" record every result file
+should sit next to: the static config fingerprint (sha1 over the
+``EngineSpec`` repr — the same statics that key the compile cache), the
+run settings (preset / topo / obs), the tracer's timing rollup and the
+compile-cache stats. ``run_experiment`` writes one per run (when an
+``Obs`` with an ``out_dir`` is attached), ``run_sweep`` writes one next
+to its JSON output, and :func:`bench_stamp` embeds the same fingerprint
+into every ``BENCH_*.json`` via ``benchmarks/common.write_bench``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import pathlib
+import time
+from typing import Any
+
+
+def fingerprint(obj: Any) -> str:
+    """Stable content hash of any JSON-ish object (non-serializable
+    leaves fall back to ``repr`` via ``default=repr``)."""
+    text = json.dumps(obj, sort_keys=True, default=repr)
+    return hashlib.sha1(text.encode()).hexdigest()
+
+
+class JsonlSink:
+    """Append-structured JSONL writer. Opens lazily, flushes per record
+    (a crashed run keeps every event up to the crash), and works as a
+    context manager. ``mode="w"`` (default) starts a fresh log per sink;
+    pass ``mode="a"`` to extend an existing one."""
+
+    def __init__(self, path, mode: str = "w"):
+        self.path = pathlib.Path(path)
+        self._mode = mode
+        self._fh = None
+        self.n_emitted = 0
+
+    def emit(self, record: dict) -> None:
+        if self._fh is None:
+            self.path.parent.mkdir(parents=True, exist_ok=True)
+            self._fh = self.path.open(self._mode)
+        self._fh.write(json.dumps(record, default=repr) + "\n")
+        self._fh.flush()
+        self.n_emitted += 1
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+def read_jsonl(path) -> list[dict]:
+    """Load a JSONL event log back into a list of dicts (empty when the
+    file was never written — a sink with zero events opens no file)."""
+    p = pathlib.Path(path)
+    if not p.exists():
+        return []
+    return [json.loads(ln) for ln in p.read_text().splitlines()
+            if ln.strip()]
+
+
+@dataclasses.dataclass
+class RunManifest:
+    """What ran, keyed how, and where the time went."""
+    kind: str              # run | sweep | bench | serve
+    name: str              # e.g. "facade-seed0"
+    fingerprint: str       # sha1 over the static spec/config repr
+    spec: str              # repr of the EngineSpec / config object
+    settings: dict         # preset / topo / obs / rounds / seed ...
+    timing: dict           # Tracer.rollup() snapshot
+    cache: "dict | None"   # EngineCache.stats() snapshot
+    created_unix: float
+    jax_version: str
+
+    @classmethod
+    def build(cls, kind: str, name: str, spec: Any, settings: dict,
+              timing: "dict | None" = None,
+              cache: "dict | None" = None) -> "RunManifest":
+        import jax
+        return cls(kind=kind, name=name,
+                   fingerprint=fingerprint(repr(spec)), spec=repr(spec),
+                   settings=settings, timing=timing or {}, cache=cache,
+                   created_unix=time.time(), jax_version=jax.__version__)
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def save(self, path) -> pathlib.Path:
+        path = pathlib.Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(self.to_json(), indent=2, default=repr))
+        return path
+
+    @classmethod
+    def load(cls, path) -> "RunManifest":
+        return cls(**json.loads(pathlib.Path(path).read_text()))
+
+
+def bench_stamp(name: str, payload: dict) -> dict:
+    """The manifest block ``benchmarks/common.write_bench`` stamps into
+    every ``BENCH_*.json``: a content fingerprint of the payload plus
+    enough environment to tell two benchmark runs apart."""
+    import jax
+    return {"name": name, "fingerprint": fingerprint(payload),
+            "jax_version": jax.__version__, "created_unix": time.time()}

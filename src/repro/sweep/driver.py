@@ -14,6 +14,7 @@ without netsim).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 import pathlib
@@ -23,6 +24,7 @@ from typing import Any, Sequence
 from repro.core.cache import EngineCache
 from repro.core.runner import run_experiment
 from repro.netsim import NetworkConfig
+from repro.obs import RunManifest
 
 from .aggregate import aggregate_cell
 
@@ -53,6 +55,9 @@ class CellResult:
     seeds: tuple
     results: list          # per-seed RunResult, in ``seeds`` order
     summary: dict          # aggregate_cell(results, targets)
+    cache_stats: dict = dataclasses.field(default_factory=dict)
+    #                      cumulative EngineCache.stats() right after this
+    #                      cell — the warm-after-first-seed story per cell
 
 
 @dataclasses.dataclass
@@ -82,6 +87,7 @@ class SweepResult:
                     v, (int, float, str, bool, type(None))) else v
                     for k, v in c.cell.kwargs.items()},
                 "summary": c.summary,
+                "cache": c.cache_stats,
             }
         return {"seeds": list(self.seeds), "wall_s": self.wall_s,
                 "cache": self.cache.stats(), "cells": cells}
@@ -95,15 +101,22 @@ class SweepResult:
 
 def run_sweep(cells: Sequence[SweepCell], seeds: Sequence[int], *,
               cache: EngineCache | None = None, targets: Sequence[float] = (),
-              json_path=None, verbose: bool = False) -> SweepResult:
+              json_path=None, obs=None,
+              verbose: bool = False) -> SweepResult:
     """Run every cell over every seed, reusing compiled programs.
 
     ``cache``: share one :class:`EngineCache` across calls to keep programs
     warm between sweeps (``None`` builds a fresh one for this sweep).
     ``targets``: accuracies for the per-cell bytes/seconds-to-target table.
-    ``json_path``: if set, the aggregated sweep is written there as JSON.
+    ``json_path``: if set, the aggregated sweep is written there as JSON,
+    with a :class:`repro.obs.RunManifest` next to it
+    (``<json_path>.manifest.json``) recording what exactly ran.
+    ``obs``: optional :class:`repro.obs.Obs` shared by every run of the
+    sweep — per-cell ``sweep.cell`` spans wrap the usual per-run
+    instrumentation, and the sweep manifest picks up its timing rollup.
     """
     cache = cache if cache is not None else EngineCache()
+    tracer = obs.tracer if obs is not None else None
     seeds = tuple(int(s) for s in seeds)
     names = [c.name for c in cells]
     if len(set(names)) != len(names):
@@ -119,12 +132,17 @@ def run_sweep(cells: Sequence[SweepCell], seeds: Sequence[int], *,
     for cell in cells:
         net = cell.resolved_net()
         results = []
-        for seed in seeds:
-            results.append(run_experiment(
-                cell.algo, cell.cfg, cell.dataset, rounds=cell.rounds,
-                seed=seed, net=net, cache=cache, **cell.kwargs))
+        span = (tracer.span("sweep.cell", cell=cell.name)
+                if tracer is not None else contextlib.nullcontext())
+        with span:
+            for seed in seeds:
+                results.append(run_experiment(
+                    cell.algo, cell.cfg, cell.dataset, rounds=cell.rounds,
+                    seed=seed, net=net, cache=cache, obs=obs,
+                    **cell.kwargs))
         summary = aggregate_cell(results, targets=targets)
-        out.append(CellResult(cell, seeds, results, summary))
+        out.append(CellResult(cell, seeds, results, summary,
+                              cache_stats=cache.stats()))
         if verbose:
             fa = summary["best_fair_acc"]
             print(f"  [sweep] {cell.name}: best_fair_acc="
@@ -133,5 +151,14 @@ def run_sweep(cells: Sequence[SweepCell], seeds: Sequence[int], *,
                   "compiles so far)")
     sweep = SweepResult(out, seeds, cache, time.perf_counter() - t0)
     if json_path is not None:
-        sweep.save(json_path)
+        path = sweep.save(json_path)
+        manifest = RunManifest.build(
+            kind="sweep", name=path.stem,
+            spec=[repr(c.cell) for c in out],
+            settings={"seeds": list(seeds), "cells": names,
+                      "targets": list(targets)},
+            timing=tracer.rollup() if tracer is not None else
+            {"wall_s": sweep.wall_s},
+            cache=cache.stats())
+        manifest.save(path.with_suffix(path.suffix + ".manifest.json"))
     return sweep

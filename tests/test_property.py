@@ -20,6 +20,7 @@ from repro.netsim import (BurstConfig, BurstFailure, LinkClasses,
                           NetworkConfig)
 from repro.models import transformer
 from repro.models.attention import chunked_sdpa, sdpa
+from repro.obs import ObsConfig
 from repro.topo import TopoConfig, TopoState
 from repro import topo as topo_mod
 from repro.roofline.analysis import (collective_bytes_from_hlo,
@@ -229,6 +230,7 @@ _SPEC_FIELDS = st.fixed_dictionaries(dict(
                             "edge-v2"]),
     eval_batch=st.sampled_from([64, 256]),
     topo=st.sampled_from([None, "uniform", "reliability", "bandwidth"]),
+    obs=st.sampled_from([None, 1, 4, 8]),   # staleness_bins | disabled
 ))
 
 _PERTURB = {
@@ -247,6 +249,7 @@ _PERTURB = {
     "eval_batch": lambda v: v + 1,
     "topo": lambda v: (TopoConfig(policy="reliability") if v is None
                        else None),
+    "obs": lambda v: (ObsConfig() if v is None else None),
 }
 
 
@@ -256,13 +259,15 @@ def _spec_from(fields) -> EngineSpec:
     net = (NetworkConfig.preset(fields["preset"])
            if fields["preset"] else None)
     topo = TopoConfig(policy=fields["topo"]) if fields["topo"] else None
+    obs = (ObsConfig(staleness_bins=fields["obs"])
+           if fields["obs"] else None)
     return EngineSpec(algo=fields["algo"], cfg=cfg, n=fields["n"],
                       k=fields["k"], degree=fields["degree"],
                       local_steps=fields["local_steps"],
                       batch_size=fields["batch_size"], lr=fields["lr"],
                       warmup_rounds=fields["warmup_rounds"],
                       head_jitter=fields["head_jitter"], net=net,
-                      eval_batch=fields["eval_batch"], topo=topo)
+                      eval_batch=fields["eval_batch"], topo=topo, obs=obs)
 
 
 @_settings
@@ -350,6 +355,27 @@ def test_engine_cache_key_topo_field_perturbation(fields, perturb):
     mutated = dataclasses.replace(
         base, topo=dataclasses.replace(
             topo, **{perturb: _TOPO_PERTURB[perturb](getattr(topo, perturb))}))
+    assert mutated != base
+    table = {base: "b", mutated: "m"}
+    assert table[base] == "b" and table[mutated] == "m"
+
+
+# Every ObsConfig field changes the compiled segment program's outputs
+# (the MetricsFrame scan leaf), so every field must fork the key. The
+# table lives in tests/test_obs.py next to its fields-coverage check;
+# importing it here keeps the hypothesis twin from drifting.
+from test_obs import _OBS_PERTURB  # noqa: E402
+
+
+@_settings
+@given(fields=_SPEC_FIELDS, perturb=st.sampled_from(sorted(_OBS_PERTURB)))
+def test_engine_cache_key_obs_field_perturbation(fields, perturb):
+    a = _spec_from(fields)
+    obs = a.obs if a.obs is not None else ObsConfig()
+    base = dataclasses.replace(a, obs=obs)
+    mutated = dataclasses.replace(
+        base, obs=dataclasses.replace(
+            obs, **{perturb: _OBS_PERTURB[perturb](getattr(obs, perturb))}))
     assert mutated != base
     table = {base: "b", mutated: "m"}
     assert table[base] == "b" and table[mutated] == "m"
