@@ -115,13 +115,43 @@ def run(quick: bool = True) -> dict:
               f"{obs_rec['jsonl_records']} JSONL records, spans "
               f"{obs_rec['spans']})")
 
+    # resil smoke: fault off-switch bit-parity + a guarded crash/NaN
+    # storm staying finite while shedding bytes; reported, never aborts
+    try:
+        from . import fault_tolerance
+        resil_rec = fault_tolerance.smoke()
+    except Exception as e:
+        resil_rec = {"status": "fail", "error": repr(e)}
+        print(f"resil smoke: FAIL ({e!r})")
+    else:
+        print(f"resil smoke: {resil_rec['status']} "
+              f"(off-switch parity {resil_rec['off_switch_parity']}, "
+              f"storm finite {resil_rec['storm_finite']}, "
+              f"{resil_rec['storm_bytes']/1e3:.1f} KB under faults vs "
+              f"{resil_rec['plain_bytes']/1e3:.1f} KB clean)")
+
+    # checkpoint smoke: save -> kill mid-run -> resume, bit-parity with an
+    # uninterrupted run (metrics and final carry); reported, never aborts
+    try:
+        from . import fault_tolerance
+        ckpt_rec = fault_tolerance.smoke_resume()
+    except Exception as e:
+        ckpt_rec = {"status": "fail", "error": repr(e)}
+        print(f"ckpt smoke: FAIL ({e!r})")
+    else:
+        print(f"ckpt smoke: {ckpt_rec['status']} "
+              f"(killed {ckpt_rec['killed_mid_run']}, metrics parity "
+              f"{ckpt_rec['metrics_parity']}, carry parity "
+              f"{ckpt_rec['carry_parity']})")
+
     recs = [r for r in load("dryrun_*.jsonl") if r.get("tag", "") == ""]
     if not recs:
         print("no dry-run records; run `python -m repro.launch.dryrun --all` "
               "(and --multi-pod) first")
         return {"netsim_smoke": net_rec, "netsim_v2_smoke": v2_rec,
                 "engine_smoke": eng_rec, "sweep_smoke": sweep_rec,
-                "topo_smoke": topo_rec, "obs_smoke": obs_rec}
+                "topo_smoke": topo_rec, "obs_smoke": obs_rec,
+                "resil_smoke": resil_rec, "ckpt_smoke": ckpt_rec}
     rows = []
     ok = fail = skip = 0
     for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
@@ -148,7 +178,8 @@ def run(quick: bool = True) -> dict:
     payload = {"n_ok": ok, "n_fail": fail, "n_skip": skip, "records": recs,
                "netsim_smoke": net_rec, "netsim_v2_smoke": v2_rec,
                "engine_smoke": eng_rec, "sweep_smoke": sweep_rec,
-               "topo_smoke": topo_rec, "obs_smoke": obs_rec}
+               "topo_smoke": topo_rec, "obs_smoke": obs_rec,
+               "resil_smoke": resil_rec, "ckpt_smoke": ckpt_rec}
     common.save("dryrun_matrix", payload)
     return payload
 

@@ -11,8 +11,8 @@ import sys
 import time
 
 from . import (churn_resilience, color_shift, comm_cost, dryrun_matrix,
-               fair_accuracy, fairness_dp_eo, k_sensitivity, kernel_bench,
-               label_skew, obs_overhead, percluster_accuracy,
+               fair_accuracy, fairness_dp_eo, fault_tolerance, k_sensitivity,
+               kernel_bench, label_skew, obs_overhead, percluster_accuracy,
                round_throughput, seed_sweep, settlement, topo_adapt,
                warmup_ablation)
 
@@ -27,6 +27,7 @@ SUITES = {
     "label_skew": label_skew,                     # App. G
     "color_shift": color_shift,                   # App. H
     "churn_resilience": churn_resilience,         # netsim presets sweep
+    "resil": fault_tolerance,                     # faults + robust gossip
     "topo_adapt": topo_adapt,                     # adaptive topology policies
     "round_throughput": round_throughput,         # segment engine rounds/sec
     "seed_sweep": seed_sweep,                     # compile-cache sweep vs naive

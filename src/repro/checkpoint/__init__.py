@@ -1,1 +1,1 @@
-from .io import load, save  # noqa: F401
+from .io import CheckpointError, load, save  # noqa: F401

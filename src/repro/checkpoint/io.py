@@ -1,21 +1,35 @@
 """Pytree checkpointing to .npz (offline container: no orbax/tensorstore).
 
-Paths are '/'-joined pytree keys; dataclass-free dicts/lists/tuples
-round-trip exactly. Works for model params, optimizer slots and full
-DL states.
+Paths are '/'-joined pytree keys; dataclass-free dicts/lists/tuples (and
+``None``, for optional components like a disabled netsim channel or crash
+chain) round-trip exactly. Works for model params, optimizer slots and
+full DL states — including the engine's whole :class:`EngineCarry`, which
+is how ``run_experiment(ckpt=...)`` gets crash-safe resume.
+
+:func:`save` is atomic: the archive is written to ``<path>.tmp`` and
+``os.replace``'d over ``path``, so a run killed mid-save leaves either the
+previous complete checkpoint or none at all — never a truncated file. A
+truncated/garbled file at load time raises :class:`CheckpointError` naming
+the path instead of a bare zipfile/KeyError traceback.
 """
 from __future__ import annotations
 
 import json
 import os
 
-import jax
 import numpy as np
+
+
+class CheckpointError(ValueError):
+    """A checkpoint file exists but cannot be parsed (corrupt/truncated,
+    or not a repro checkpoint at all)."""
 
 
 def _flatten(tree, prefix=""):
     out = {}
-    if isinstance(tree, dict):
+    if tree is None:
+        pass                      # structure-only: recorded in __struct__
+    elif isinstance(tree, dict):
         for k in sorted(tree):
             out.update(_flatten(tree[k], f"{prefix}{k}/"))
     elif isinstance(tree, (list, tuple)):
@@ -31,19 +45,36 @@ def _flatten(tree, prefix=""):
 
 
 def save(path: str, tree, meta: dict | None = None):
+    """Atomically write ``tree`` (+ a small JSON-able ``meta`` dict) to
+    ``path``: the archive lands under a temp name first and is renamed
+    into place, so concurrent readers and mid-write crashes only ever see
+    a complete file."""
     flat = _flatten(tree)
-    struct = jax.tree.map(lambda _: None, tree)
-    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    np.savez(path, __meta__=json.dumps(meta or {}),
-             __struct__=json.dumps(_structure(tree)), **flat)
+    parent = os.path.dirname(os.path.abspath(path))
+    os.makedirs(parent, exist_ok=True)
+    tmp = path + ".tmp"
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, __meta__=json.dumps(meta or {}),
+                     __struct__=json.dumps(_structure(tree)), **flat)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
 
 
 def _structure(tree):
+    if tree is None:
+        return {"__kind__": "none"}
     if isinstance(tree, dict):
         return {"__kind__": "dict",
                 "items": {k: _structure(v) for k, v in tree.items()}}
     if isinstance(tree, (list, tuple)):
-        return {"__kind__": type(tree).__name__,
+        # NamedTuples (EngineCarry, ChannelState, ...) are recorded as
+        # plain tuples: the container survives, the class doesn't —
+        # resume rebuilds typed carries by unflattening onto a freshly
+        # minted template treedef
+        return {"__kind__": "list" if isinstance(tree, list) else "tuple",
                 "items": [_structure(v) for v in tree]}
     return {"__kind__": "leaf",
             "dtype": str(np.asarray(tree).dtype)}
@@ -51,6 +82,8 @@ def _structure(tree):
 
 def _rebuild(struct, flat, prefix=""):
     kind = struct["__kind__"]
+    if kind == "none":
+        return None
     if kind == "dict":
         return {k: _rebuild(v, flat, f"{prefix}{k}/")
                 for k, v in struct["items"].items()}
@@ -65,9 +98,19 @@ def _rebuild(struct, flat, prefix=""):
 
 
 def load(path: str):
-    with np.load(path, allow_pickle=False) as z:
-        flat = {k: z[k] for k in z.files
-                if k not in ("__meta__", "__struct__")}
-        struct = json.loads(str(z["__struct__"]))
-        meta = json.loads(str(z["__meta__"]))
-    return _rebuild(struct, flat), meta
+    if not os.path.exists(path):
+        raise FileNotFoundError(f"no checkpoint at {path!r}")
+    try:
+        with np.load(path, allow_pickle=False) as z:
+            flat = {k: z[k] for k in z.files
+                    if k not in ("__meta__", "__struct__")}
+            struct = json.loads(str(z["__struct__"]))
+            meta = json.loads(str(z["__meta__"]))
+        return _rebuild(struct, flat), meta
+    except (FileNotFoundError, CheckpointError):
+        raise
+    except Exception as e:
+        raise CheckpointError(
+            f"corrupt or truncated checkpoint at {path!r} "
+            f"({type(e).__name__}: {e}); delete it to restart the run "
+            "from scratch") from e

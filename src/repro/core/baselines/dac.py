@@ -9,12 +9,13 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro import resil
 from repro import topo as topo_mod
 
 from .. import split, topology
 from ..bindings import Binding, gossip_mix, local_sgd
 from ..state import BaselineState, freeze_inactive
-from ..netwire import comm_info, masked_topology, stale_view
+from ..netwire import comm_info, masked_topology, sent_view
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,7 +33,8 @@ def init_dac_extra(n: int):
 
 
 def dac_round(cfg: DACConfig, binding: Binding, state: BaselineState,
-              batches, net=None, gossip=None, topo=None, topo_cfg=None):
+              batches, net=None, gossip=None, topo=None, topo_cfg=None,
+              fault_cfg=None):
     n = cfg.n_nodes
     key, k_top = jax.random.split(state.rng)
     sim = state.extra["sim"]
@@ -57,8 +59,10 @@ def dac_round(cfg: DACConfig, binding: Binding, state: BaselineState,
     adj = masked_topology(net, adj)
 
     # what each peer DELIVERS this round: its published snapshot when it
-    # is stale (async gossip), its live params otherwise
-    vis = stale_view(net, gossip, state.params)
+    # is stale (async gossip), its live params otherwise — possibly
+    # corrupted in transit (fault injection)
+    vis = sent_view(net, gossip, state.params, fault_cfg)
+    guard = resil.guard_of(fault_cfg)
     delivered_params = state.params if vis is None else vis
 
     # --- similarity update: inverse loss of peer's model on local batch ---
@@ -74,6 +78,11 @@ def dac_round(cfg: DACConfig, binding: Binding, state: BaselineState,
         return jax.vmap(loss_of)(nbr[i])                     # [r]
 
     l_peer = jax.vmap(peer_losses)(jnp.arange(n))            # [n, r]
+    if guard is not None:
+        # a NaN'd peer model scores NaN loss, which would poison the
+        # similarity table forever — under the robust guard it scores as
+        # maximally dissimilar instead
+        l_peer = jnp.where(jnp.isfinite(l_peer), l_peer, 1e9)
     rows = jnp.arange(n)[:, None]
     inv_loss = 1.0 / jnp.maximum(l_peer, 1e-6)
     if net is not None or part is not None:
@@ -85,7 +94,7 @@ def dac_round(cfg: DACConfig, binding: Binding, state: BaselineState,
 
     # --- aggregate with similarity weights, then local train ---
     w = topology.weighted_mixing(adj, jnp.maximum(new_sim, 1e-6))
-    params = gossip_mix(w, state.params, vis)
+    params = gossip_mix(w, state.params, vis, guard=guard)
 
     params = jax.vmap(lambda p, b: local_sgd(binding, p, b, cfg.lr))(
         params, batches)
@@ -97,5 +106,6 @@ def dac_round(cfg: DACConfig, binding: Binding, state: BaselineState,
         jax.tree.map(lambda l: l[0], state.params))
     info = comm_info(net, adj, model_bytes, n * cfg.degree,
                      actual=part is not None)
+    info["quarantined"] = resil.quarantined_count(guard, vis)
     return BaselineState(params=params, extra={"sim": new_sim},
                          round=state.round + 1, rng=key), info

@@ -10,12 +10,13 @@ from typing import NamedTuple, Any
 import jax
 import jax.numpy as jnp
 
+from repro import resil
 from repro import topo as topo_mod
 
 from .. import split, topology
 from ..bindings import Binding, gossip_mix, local_sgd
 from ..state import BaselineState, freeze_inactive
-from ..netwire import comm_info, masked_topology, stale_view
+from ..netwire import comm_info, masked_topology, sent_view
 
 
 @dataclasses.dataclass(frozen=True)
@@ -27,7 +28,8 @@ class DeprlConfig:
 
 
 def deprl_round(cfg: DeprlConfig, binding: Binding, state: BaselineState,
-                batches, net=None, gossip=None, topo=None, topo_cfg=None):
+                batches, net=None, gossip=None, topo=None, topo_cfg=None,
+                fault_cfg=None):
     """state.params [n, ...] full models; only cores are mixed."""
     # static-ring legacy topology: adaptive sampling uses repro.topo's own
     # seeded round stream (see dpsgd_round)
@@ -47,7 +49,9 @@ def deprl_round(cfg: DeprlConfig, binding: Binding, state: BaselineState,
     pub_cores = None
     if gossip is not None:
         pub_cores, _ = jax.vmap(split_n)(gossip)
-    cores = gossip_mix(w, cores, stale_view(net, pub_cores, cores))
+    vis = sent_view(net, pub_cores, cores, fault_cfg)
+    guard = resil.guard_of(fault_cfg)
+    cores = gossip_mix(w, cores, vis, guard=guard)
 
     def local(core, head, bh):
         p = split.merge_params(core, head)
@@ -60,5 +64,6 @@ def deprl_round(cfg: DeprlConfig, binding: Binding, state: BaselineState,
     core_bytes = split.tree_size_bytes(jax.tree.map(lambda l: l[0], cores))
     info = comm_info(net, adj, core_bytes, cfg.n_nodes * cfg.degree,
                      actual=topo_mod.adaptive(topo_cfg))
+    info["quarantined"] = resil.quarantined_count(guard, vis)
     return BaselineState(params=params, extra=state.extra,
                          round=state.round + 1, rng=state.rng), info

@@ -7,12 +7,13 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro import resil
 from repro import topo as topo_mod
 
 from .. import split, topology
 from ..bindings import Binding, gossip_mix, local_sgd
 from ..state import BaselineState, freeze_inactive
-from ..netwire import comm_info, masked_topology, stale_view
+from ..netwire import comm_info, masked_topology, sent_view
 
 
 @dataclasses.dataclass(frozen=True)
@@ -24,7 +25,8 @@ class DpsgdConfig:
 
 
 def dpsgd_round(cfg: DpsgdConfig, binding: Binding, state: BaselineState,
-                batches, net=None, gossip=None, topo=None, topo_cfg=None):
+                batches, net=None, gossip=None, topo=None, topo_cfg=None,
+                fault_cfg=None):
     # legacy topology is a static ring (no per-round PRNG to reuse), so an
     # adaptive policy samples from repro.topo's own seeded round stream
     if topo_mod.adaptive(topo_cfg):
@@ -40,7 +42,9 @@ def dpsgd_round(cfg: DpsgdConfig, binding: Binding, state: BaselineState,
     # contribute their last published model instead of today's)
     params = jax.vmap(lambda p, b: local_sgd(binding, p, b, cfg.lr))(
         state.params, batches)
-    params = gossip_mix(w, params, stale_view(net, gossip, params))
+    vis = sent_view(net, gossip, params, fault_cfg)
+    guard = resil.guard_of(fault_cfg)
+    params = gossip_mix(w, params, vis, guard=guard)
     if net is not None:
         params = freeze_inactive(net.active, params, state.params)
 
@@ -48,5 +52,6 @@ def dpsgd_round(cfg: DpsgdConfig, binding: Binding, state: BaselineState,
         jax.tree.map(lambda l: l[0], state.params))
     info = comm_info(net, adj, model_bytes, cfg.n_nodes * cfg.degree,
                      actual=topo_mod.adaptive(topo_cfg))
+    info["quarantined"] = resil.quarantined_count(guard, vis)
     return BaselineState(params=params, extra=state.extra,
                          round=state.round + 1, rng=state.rng), info

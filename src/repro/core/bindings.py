@@ -47,33 +47,83 @@ def local_sgd(binding: "Binding", params, batches_h, lr):
     return params
 
 
-def gossip_mix(w, tree, visible=None):
+def gossip_mix(w, tree, visible=None, guard=None):
     """Row-stochastic gossip mixing (Eq. 3): ``out_i = sum_j W_ij x_j``
     over node-stacked pytrees — THE one mixing definition shared by FACADE
     and every baseline, so the engine's parity guarantees stay
     algorithm-independent (like :func:`local_sgd` for the local phase).
 
-    ``visible`` (async stale gossip, ``netwire.stale_view``): an optional
-    same-structure tree of the per-node snapshots *neighbors observe* —
-    stale nodes expose their last published state there. Neighbor terms
-    then read ``visible`` while each node's self-term always uses its own
-    fresh leaf: ``out_i = sum_j W_ij v_j + W_ii (x_i - v_i)``. With no
-    stale node (``visible == tree``) the correction is exactly zero.
+    ``visible`` (async stale gossip, ``netwire.stale_view`` /
+    ``netwire.sent_view``): an optional same-structure tree of the
+    per-node snapshots *neighbors observe* — stale nodes expose their
+    last published state there. Neighbor terms then read ``visible``
+    while each node's self-term always uses its own fresh leaf:
+    ``out_i = sum_j W_ij v_j + W_ii (x_i - v_i)``. With no stale node
+    (``visible == tree``) the correction is exactly zero.
+
+    ``guard`` (robust aggregation, :func:`repro.resil.guard_of`): when a
+    :class:`repro.resil.FaultConfig` is supplied, the mix degrades
+    gracefully under poisoned payloads instead of NaN'ing every receiver:
+
+    * **quarantine** — senders with ANY non-finite float leaf lose their
+      off-diagonal weight entirely and each row of ``W`` is renormalized
+      over its surviving neighbors (self weight always kept), so one
+      NaN'd node costs its neighbors one contribution, not their state;
+    * **norm clip** — every surviving neighbor's contribution is scaled
+      by ``min(1, clip * ||self|| / ||sender||)``: a blown-up payload
+      contributes at most ``clip`` times the receiver's own norm in the
+      sender's direction. Honest payloads (comparable norms) are scaled
+      by exactly 1.0's neighborhood, so degradation is smooth.
+
+    ``guard=None`` (every zero-rate off-switch) is bit-for-bit the
+    historical arithmetic — the guard's renormalization must never touch
+    honest runs (``mixing_matrix`` rows are only float-tolerance
+    stochastic, so renormalizing would perturb bits).
     """
-    if visible is None:
-        return jax.tree.map(
-            lambda p: jnp.einsum("ij,j...->i...", w.astype(p.dtype), p),
-            tree)
-    diag = jnp.diagonal(w)
+    if guard is None:
+        if visible is None:
+            return jax.tree.map(
+                lambda p: jnp.einsum("ij,j...->i...", w.astype(p.dtype), p),
+                tree)
+        diag = jnp.diagonal(w)
+
+        def mix(p, v):
+            out = jnp.einsum("ij,j...->i...", w.astype(p.dtype),
+                             v.astype(p.dtype))
+            d = diag.reshape((diag.shape[0],) + (1,) * (p.ndim - 1))
+            return (out + d.astype(p.dtype)
+                    * (p - v.astype(p.dtype))).astype(p.dtype)
+
+        return jax.tree.map(mix, tree, visible)
+
+    from repro import resil   # local import: resil must stay core-free
+    v_tree = tree if visible is None else visible
+    n = w.shape[0]
+    finite = resil.node_finite(v_tree)                         # [n]
+    vnorm = jnp.where(finite > 0, resil.node_norm(v_tree), 1.0)
+    pnorm = resil.node_norm(tree)                              # own, fresh
+    eye = jnp.eye(n, dtype=w.dtype)
+    off = 1.0 - eye
+    # quarantine: drop poisoned senders' off-diagonal mass, renormalize
+    # each row over the survivors (the self weight is always kept)
+    wq = w * off * finite[None, :] + w * eye
+    wr = wq / jnp.maximum(wq.sum(axis=1, keepdims=True), 1e-12)
+    # norm clip: cap each neighbor's contribution at `clip` x own norm
+    scale = jnp.minimum(1.0, guard.clip * jnp.maximum(pnorm, 1e-12)[:, None]
+                        / jnp.maximum(vnorm, 1e-12)[None, :])
+    scale = scale * off + eye          # never clip the self term
+    ws = wr * scale
+    diag = jnp.diagonal(wr)
 
     def mix(p, v):
-        out = jnp.einsum("ij,j...->i...", w.astype(p.dtype),
-                         v.astype(p.dtype))
-        d = diag.reshape((diag.shape[0],) + (1,) * (p.ndim - 1))
-        return (out + d.astype(p.dtype) * (p - v.astype(p.dtype))).astype(
-            p.dtype)
+        m = finite.reshape((n,) + (1,) * (p.ndim - 1))
+        # zero quarantined leaves BEFORE the einsum: 0-weight x NaN = NaN
+        vs = jnp.where(m > 0, v.astype(p.dtype), 0).astype(p.dtype)
+        out = jnp.einsum("ij,j...->i...", ws.astype(p.dtype), vs)
+        d = diag.reshape((n,) + (1,) * (p.ndim - 1))
+        return (out + d.astype(p.dtype) * (p - vs)).astype(p.dtype)
 
-    return jax.tree.map(mix, tree, visible)
+    return jax.tree.map(mix, tree, v_tree)
 
 
 def _untie_lm_head(cfg, params, key):

@@ -138,7 +138,8 @@ class CacheEntry:
             spec.algo, self.binding, spec.n, spec.k, degree=spec.degree,
             local_steps=spec.local_steps, lr=spec.lr,
             warmup_rounds=spec.warmup_rounds, head_jitter=spec.head_jitter,
-            topo=spec.topo)
+            topo=spec.topo,
+            faults=spec.net.faults if spec.net is not None else None)
         self.engine = SegmentEngine(
             self.program.round_fn, warmup_fn=self.program.warmup_fn,
             net=spec.net, n=spec.n, local_steps=spec.local_steps,

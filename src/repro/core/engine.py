@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import netsim
+from repro import resil as resil_mod
 from repro import topo as topo_mod
 from repro.data import pipeline
 from repro.obs import frame as obs_frame
@@ -127,7 +128,8 @@ class SegmentEngine:
         (``net.burst``) and the async staleness buffer (``net.async_gossip``;
         a leaf-for-leaf COPY of the initial mixable state so the buffer
         never aliases the donated training buffers) — plus the adaptive
-        topology policy's link EWMAs (``None`` for uniform/off)."""
+        topology policy's link EWMAs (``None`` for uniform/off) and the
+        node-crash chain (``net.faults``, :mod:`repro.resil`)."""
         net, n = self._net, self._n
         chan = netsim.init_channel(net, n) if net is not None else None
         gossip = None
@@ -139,7 +141,8 @@ class SegmentEngine:
                     "(runner.algo_program provides it)")
             gossip = netsim.init_gossip(net, n, self._mixable_of(state))
         topo = topo_mod.init_state(self._topo, net, n)
-        return EngineCarry(state, k_data, chan, gossip, topo)
+        fault = resil_mod.init_state(net, n, state)
+        return EngineCarry(state, k_data, chan, gossip, topo, fault)
 
     # -- one segment = one jitted scan --------------------------------------
     def _build(self, length: int, warmup: bool) -> Callable:
@@ -151,7 +154,7 @@ class SegmentEngine:
 
         def segment(carry, start, train_x, train_y):
             def step(carry, rnd):
-                prev_state, k_data, chan, gossip, topo = carry
+                prev_state, k_data, chan, gossip, topo, fault = carry
                 k_data, k_b = jax.random.split(k_data)
                 batches = pipeline.sample_round_batches(
                     k_b, train_x, train_y, h, b)
@@ -159,6 +162,11 @@ class SegmentEngine:
                 if net is not None:
                     conds, chan = netsim.advance_conditions(net, n, rnd,
                                                             chan)
+                    conds, fault, restarted = resil_mod.advance(
+                        net, n, rnd, conds, fault)
+                    if restarted is not None:
+                        prev_state = resil_mod.reset_nodes(
+                            n, restarted, fault.init, prev_state)
                     conds, published = netsim.apply_async(net, conds, gossip)
                 state, info = round_fn(prev_state, batches, net=conds,
                                        gossip=published, topo=topo)
@@ -179,7 +187,8 @@ class SegmentEngine:
                         getattr(prev_state, "cluster_id", None),
                         getattr(state, "cluster_id", None), info, conds,
                         gossip)
-                return EngineCarry(state, k_data, chan, gossip, topo), out
+                return EngineCarry(state, k_data, chan, gossip, topo,
+                                   fault), out
 
             rnds = start + jnp.arange(length, dtype=jnp.int32)
             return jax.lax.scan(step, carry, rnds)

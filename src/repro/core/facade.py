@@ -21,12 +21,12 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro import netsim
+from repro import resil
 from repro import topo as topo_mod
 
 from . import split, topology
 from .bindings import Binding, gossip_mix, local_sgd
-from .netwire import comm_info, masked_topology, stale_view
+from .netwire import comm_info, masked_topology, sent_view
 from .state import FacadeState, freeze_inactive
 
 
@@ -42,14 +42,22 @@ class FacadeConfig:
 
 
 # --------------------------------------------------------------------------
-def _aggregate_heads(adj, cluster_id, heads, k, sent_heads=None):
+def _aggregate_heads(adj, cluster_id, heads, k, sent_heads=None,
+                     guard=None):
     """Eq. 4: for each node i and cluster j, average the heads *sent* by
     neighbors claiming cluster j together with i's own stored head j.
 
     heads [n, k, ...]; sent head of node j' = sent_heads[j', cid_j'].
     ``cluster_id``/``sent_heads`` describe what each node PUBLISHES this
-    round (under async gossip a stale node publishes its old snapshot);
-    ``heads`` is always the receiver's own fresh stored bank.
+    round (under async gossip a stale node publishes its old snapshot;
+    under payload corruption it may be mangled); ``heads`` is always the
+    receiver's own fresh stored bank.
+
+    ``guard`` (:func:`repro.resil.guard_of`): the head-bank analogue of
+    ``gossip_mix``'s robust guard — a sender whose published head is
+    non-finite is quarantined (dropped from both the sum AND the count),
+    and finite senders are norm-clipped against the receiver's own
+    per-slot RMS head norm. ``None`` is the bit-exact legacy arithmetic.
     """
     n = adj.shape[0]
     if sent_heads is None:
@@ -57,17 +65,42 @@ def _aggregate_heads(adj, cluster_id, heads, k, sent_heads=None):
     sent = jax.tree.map(
         lambda h: h[jnp.arange(n), cluster_id], sent_heads)  # [n, ...]
     onehot = jax.nn.one_hot(cluster_id, k, dtype=jnp.float32)  # [n, k]
+    adj_w = adj
+    if guard is not None:
+        finite = resil.node_finite(sent)                     # [n]
+        snorm = jnp.where(finite > 0, resil.node_norm(sent), 1.0)
+        own = resil.node_norm(heads) / jnp.sqrt(float(k))    # per-slot RMS
+        clip = jnp.minimum(
+            1.0, guard.clip * jnp.maximum(own, 1e-12)[:, None]
+            / jnp.maximum(snorm, 1e-12)[None, :])            # [n, n]
+        # quarantined senders leave both the weighted sum and the count;
+        # their (possibly NaN) head leaves are zeroed before the einsum
+        adj = adj * finite[None, :]
+        adj_w = adj * clip
+        sent = resil_tree_zero(sent, finite)
     # cnt[i, c] = number of neighbors of i claiming cluster c
     cnt = jnp.einsum("ij,jc->ic", adj, onehot)              # [n, k]
     denom = 1.0 + cnt                                        # + own stored head
 
     def agg(h_all, h_sent):
-        recv = jnp.einsum("ij,jc,j...->ic...", adj.astype(h_sent.dtype),
+        recv = jnp.einsum("ij,jc,j...->ic...", adj_w.astype(h_sent.dtype),
                           onehot.astype(h_sent.dtype), h_sent)
         d = denom.reshape(denom.shape + (1,) * (h_all.ndim - 2))
         return ((h_all + recv) / d.astype(h_all.dtype)).astype(h_all.dtype)
 
     return jax.tree.map(agg, heads, sent)
+
+
+def resil_tree_zero(tree, keep):
+    """Zero float leaves of nodes with ``keep == 0`` along the leading
+    axis (quarantine hygiene: 0-weight x NaN is still NaN in an einsum)."""
+    def z(l):
+        if not jnp.issubdtype(l.dtype, jnp.floating):
+            return l
+        m = keep.reshape((keep.shape[0],) + (1,) * (l.ndim - 1))
+        return jnp.where(m > 0, l, 0).astype(l.dtype)
+
+    return jax.tree.map(z, tree)
 
 
 def _select_heads(binding: Binding, cores, heads, batches):
@@ -82,7 +115,7 @@ def _select_heads(binding: Binding, cores, heads, batches):
 # --------------------------------------------------------------------------
 def facade_round(fcfg: FacadeConfig, binding: Binding, state: FacadeState,
                  batches, warmup: bool = False, net=None, gossip=None,
-                 topo=None, topo_cfg=None):
+                 topo=None, topo_cfg=None, fault_cfg=None):
     """One synchronous FACADE round for all nodes.
 
     batches: pytree with leading [n, H, B, ...] — per-node, per-local-step.
@@ -98,6 +131,10 @@ def facade_round(fcfg: FacadeConfig, binding: Binding, state: FacadeState,
     (:mod:`repro.topo`) — an adaptive policy replaces the uniform
     r-regular draw (same PRNG split, so the uniform policy stays
     bit-for-bit the legacy path).
+    fault_cfg: optional static :class:`repro.resil.FaultConfig` — payload
+    corruption mangles what a flagged node delivers (``netwire.sent_view``)
+    and, when robust, the aggregation guard quarantines/clips poisoned
+    senders in BOTH the core mix and the head aggregation.
     Returns (new_state, info dict with losses/selection/comm bytes).
     """
     n, k = fcfg.n_nodes, fcfg.k
@@ -109,21 +146,23 @@ def facade_round(fcfg: FacadeConfig, binding: Binding, state: FacadeState,
     adj = masked_topology(net, adj)
     w = topology.mixing_matrix(adj)
 
-    # --- what each node publishes this round (== its fresh state unless
-    # --- it stays stale under async gossip) ---
-    vis_cores = stale_view(net, None if gossip is None else gossip["cores"],
-                           state.cores)
-    sent_heads, sent_cid = None, state.cluster_id
-    if gossip is not None and net is not None and net.stale is not None:
-        sent_heads = netsim.tree_select(net.stale, gossip["heads"],
-                                        state.heads)
-        sent_cid = jnp.where(net.stale > 0, gossip["cluster_id"],
-                             state.cluster_id).astype(jnp.int32)
+    # --- what each node's neighbors receive this round (== its fresh
+    # --- state unless it stays stale under async gossip or ships a
+    # --- corrupted payload under fault injection) ---
+    fresh = {"cores": state.cores, "heads": state.heads,
+             "cluster_id": state.cluster_id}
+    sent = sent_view(net, gossip, fresh, fault_cfg)
+    if sent is None:
+        vis_cores, sent_heads, sent_cid = None, None, state.cluster_id
+    else:
+        vis_cores, sent_heads = sent["cores"], sent["heads"]
+        sent_cid = sent["cluster_id"]
 
     # --- aggregation (steps 2a/2b) ---
-    cores = gossip_mix(w, state.cores, vis_cores)
+    guard = resil.guard_of(fault_cfg)
+    cores = gossip_mix(w, state.cores, vis_cores, guard=guard)
     heads = _aggregate_heads(adj, sent_cid, state.heads, k,
-                             sent_heads=sent_heads)
+                             sent_heads=sent_heads, guard=guard)
 
     # --- cluster identification (step 2c) on the first local batch ---
     first = jax.tree.map(lambda b: b[:, 0], batches)
@@ -164,6 +203,7 @@ def facade_round(fcfg: FacadeConfig, binding: Binding, state: FacadeState,
     info = {
         "selection_losses": losses,
         "cluster_id": new_cid,
+        "quarantined": resil.quarantined_count(guard, sent),
         **comm_info(net, adj, payload, n * fcfg.degree,
                     actual=topo_mod.adaptive(topo_cfg)),
     }

@@ -17,12 +17,19 @@ stay-stale mask; ``None`` on every synchronous path):
   "sends" — its neighbors reuse the cached copy they already hold;
 * :func:`round_seconds` drops stale nodes from the round's gating set —
   their compute overlaps later rounds instead of stretching this one.
+
+repro.resil rides the same contracts: :func:`sent_view` composes the
+stale view with per-sender payload corruption, and crashed nodes need NO
+new accounting — they are ``active == 0``, so ``effective_adjacency``
+zeroes their directed edges (0 bytes) and ``round_time``'s ``active``
+product keeps them out of the ``round_seconds`` gating set.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 from repro import netsim
+from repro import resil
 
 from . import topology
 
@@ -42,6 +49,22 @@ def stale_view(net, published, fresh):
     if net is None or published is None or net.stale is None:
         return None
     return netsim.tree_select(net.stale, published, fresh)
+
+
+def sent_view(net, published, fresh, fault_cfg=None):
+    """What each node's neighbors RECEIVE this round: the async stale view
+    (:func:`stale_view`) composed with per-sender payload corruption
+    (:func:`repro.resil.corrupt_view`). A corrupting node mangles
+    whatever it delivers — its fresh state or its stale snapshot alike;
+    its own stored state is untouched. Returns ``None`` (plain mixing
+    path) when both mechanisms are off — exactly :func:`stale_view`'s
+    contract, so every zero-rate off-switch stays bit-for-bit legacy."""
+    vis = stale_view(net, published, fresh)
+    if (fault_cfg is None or fault_cfg.corrupt_rate <= 0
+            or net is None or net.corrupt is None):
+        return vis
+    return resil.corrupt_view(fault_cfg, net,
+                              fresh if vis is None else vis)
 
 
 def comm_info(net, adj_eff, payload_bytes, nominal_sends, actual=False):

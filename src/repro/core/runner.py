@@ -24,18 +24,21 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import functools
+import os
 from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import checkpoint
 from repro.comm import CommLog
 from repro.data import pipeline
 from repro.fairness import demographic_parity, equalized_odds, fair_accuracy
 from repro.models import cnn as cnn_mod
 from repro import netsim
 from repro import obs as obs_mod
+from repro import resil as resil_mod
 from repro import topo as topo_mod
 
 from . import facade as facade_mod
@@ -102,11 +105,13 @@ class AlgoProgram(NamedTuple):
 def algo_program(algo: str, binding: Binding, n: int, k: int, *,
                  degree: int, local_steps: int, lr: float,
                  warmup_rounds: int = 0, head_jitter: float = 0.0,
-                 topo=None) -> AlgoProgram:
+                 topo=None, faults=None) -> AlgoProgram:
     """``topo``: optional frozen :class:`repro.topo.TopoConfig`, closed
     over the round closures like the algorithm config (static at trace
     time); its per-link EWMA state is passed per round via the stepper's
-    ``topo=`` kwarg."""
+    ``topo=`` kwarg. ``faults``: optional frozen
+    :class:`repro.resil.FaultConfig` (== ``net.faults``), closed over the
+    same way — payload corruption + the robust aggregation guard."""
     if algo == "facade":
         fcfg = facade_mod.FacadeConfig(
             n_nodes=n, k=k, degree=degree, local_steps=local_steps, lr=lr,
@@ -116,10 +121,10 @@ def algo_program(algo: str, binding: Binding, n: int, k: int, *,
                 binding, key, n, k, head_jitter=head_jitter),
             round_fn=functools.partial(facade_mod.facade_round, fcfg,
                                        binding, warmup=False,
-                                       topo_cfg=topo),
+                                       topo_cfg=topo, fault_cfg=faults),
             warmup_fn=functools.partial(facade_mod.facade_round, fcfg,
                                         binding, warmup=True,
-                                        topo_cfg=topo),
+                                        topo_cfg=topo, fault_cfg=faults),
             models_of=lambda s: facade_mod.node_models(s, binding),
             finalize=functools.partial(facade_mod.final_allreduce, fcfg),
             track_cluster=True,
@@ -132,7 +137,8 @@ def algo_program(algo: str, binding: Binding, n: int, k: int, *,
                        lr=lr)
         round_fn = {"el": el_round, "dpsgd": dpsgd_round,
                     "deprl": deprl_round, "dac": dac_round}[algo]
-        fn = functools.partial(round_fn, acfg, binding, topo_cfg=topo)
+        fn = functools.partial(round_fn, acfg, binding, topo_cfg=topo,
+                               fault_cfg=faults)
         return AlgoProgram(
             init_state=lambda key: init_baseline_state(
                 binding, key, n,
@@ -147,11 +153,12 @@ def algo_program(algo: str, binding: Binding, n: int, k: int, *,
 def algo_setup(algo: str, binding: Binding, key, n: int, k: int, *,
                degree: int, local_steps: int, lr: float,
                warmup_rounds: int = 0, head_jitter: float = 0.0,
-               topo=None) -> AlgoSetup:
+               topo=None, faults=None) -> AlgoSetup:
     return algo_program(algo, binding, n, k, degree=degree,
                         local_steps=local_steps, lr=lr,
                         warmup_rounds=warmup_rounds,
-                        head_jitter=head_jitter, topo=topo).setup(key)
+                        head_jitter=head_jitter, topo=topo,
+                        faults=faults).setup(key)
 
 
 # --------------------------------------------------------------------------
@@ -268,6 +275,7 @@ def run_experiment(algo: str, cfg, dataset, *, rounds: int, k: int | None = None
                    cache: EngineCache | None = None,
                    eval_batch: int = 256,
                    obs: "obs_mod.Obs | None" = None,
+                   ckpt: "str | None" = None,
                    verbose: bool = False) -> RunResult:
     """Run one (algorithm, dataset) experiment end to end (CNN models).
 
@@ -299,7 +307,23 @@ def run_experiment(algo: str, cfg, dataset, *, rounds: int, k: int | None = None
     :class:`repro.obs.RunManifest` at the end of the run. ``None`` is
     bit-for-bit the untelemetered path; an attached ``Obs`` never
     perturbs the trajectory either (telemetry is pure observation).
+
+    ``ckpt``: optional checkpoint path (engine driver only). After every
+    segment the full :class:`EngineCarry`, the ``CommLog``/eval histories
+    and the drained obs frames are snapshotted atomically
+    (write-temp-then-rename, :mod:`repro.checkpoint`); rerunning the SAME
+    call with the same path resumes from the last completed segment and
+    finishes bit-for-bit identical to an uninterrupted run — segment
+    boundaries are exactly the eval boundaries, and everything that
+    crosses them (data PRNG, netsim channel, async gossip, topo EWMAs,
+    crash chain) lives in the carry. A checkpoint written by a DIFFERENT
+    run configuration is refused (fingerprint mismatch), never silently
+    reused.
     """
+    if ckpt is not None and not engine:
+        raise ValueError(
+            "ckpt= needs the segment engine (engine=True): the legacy "
+            "per-round loop has no segment boundaries to snapshot at")
     if target_acc is not None and eval_every > rounds:
         raise ValueError(
             f"target_acc={target_acc} can never trigger an early exit with "
@@ -347,12 +371,21 @@ def run_experiment(algo: str, cfg, dataset, *, rounds: int, k: int | None = None
         tracer.event("evaluator.build", batch=spec.eval_batch)
     hist = _History(dataset.node_cluster, n, evaluator, setup.models_of,
                     target_acc, verbose, algo, entry.binding.cfg.n_classes)
+    ckpt_fp = None
+    if ckpt is not None:
+        # everything that shapes the trajectory or the resume schedule;
+        # a stale checkpoint from any other configuration is refused
+        ckpt_fp = obs_mod.fingerprint({
+            "spec": repr(spec), "seed": seed, "rounds": rounds,
+            "eval_every": eval_every, "warmup_rounds": warmup_rounds,
+            "target": repr(target_acc)})
     prof = obs.profile() if obs is not None else contextlib.nullcontext()
     with prof, _sp(tracer, "run", algo=algo, seed=seed, engine=engine):
         if engine:
             _drive_engine(entry.engine, setup, hist, k_data, train_x,
                           train_y, rounds=rounds, eval_every=eval_every,
-                          warmup_rounds=warmup_rounds, obs=obs)
+                          warmup_rounds=warmup_rounds, obs=obs,
+                          ckpt=ckpt, ckpt_fp=ckpt_fp)
         else:
             _drive_legacy(setup, hist, k_data, train_x, train_y,
                           rounds=rounds, eval_every=eval_every,
@@ -370,9 +403,82 @@ def run_experiment(algo: str, cfg, dataset, *, rounds: int, k: int | None = None
 
 
 # --------------------------------------------------------------------------
+def _hist_snapshot(hist: _History) -> dict:
+    """The :class:`_History` as a checkpoint-able pytree (plain arrays);
+    inverse of :func:`_hist_restore`. float64/int64 round-trip exactly, so
+    a restored history is bit-for-bit the live one."""
+    c = hist.comm
+    return {
+        "comm": {"rounds": np.asarray(c.rounds, np.int64),
+                 "bytes": np.asarray(c.bytes, np.float64),
+                 "seconds": np.asarray(c.seconds, np.float64),
+                 "acc": np.asarray(c.acc, np.float64),
+                 "evaled": np.asarray(c.evaled, np.bool_)},
+        "acc_hist": [{"round": np.asarray(r, np.int64),
+                      "accs": np.asarray(a, np.float64)}
+                     for r, a in hist.acc_hist],
+        "fair_hist": {
+            "rounds": np.asarray([r for r, _ in hist.fair_hist], np.int64),
+            "vals": np.asarray([v for _, v in hist.fair_hist], np.float64)},
+        "cluster_hist": [{"round": np.asarray(r, np.int64),
+                          "cid": np.asarray(cid)}
+                         for r, cid in hist.cluster_hist],
+        "dp": np.asarray(hist.dp, np.float64),
+        "eo": np.asarray(hist.eo, np.float64),
+        "accs": np.asarray(hist.accs, np.float64),
+        "node_acc": (None if hist.node_acc is None
+                     else np.asarray(hist.node_acc)),
+    }
+
+
+def _hist_restore(hist: _History, snap: dict):
+    """Rehydrate ``hist`` from a :func:`_hist_snapshot` pytree, restoring
+    the exact Python container types the drivers append (lists of ints /
+    floats / tuples) so downstream consumers can't tell a resumed run
+    from an uninterrupted one."""
+    c = hist.comm
+    c.rounds = [int(v) for v in snap["comm"]["rounds"]]
+    c.bytes = [float(v) for v in snap["comm"]["bytes"]]
+    c.seconds = [float(v) for v in snap["comm"]["seconds"]]
+    c.acc = [float(v) for v in snap["comm"]["acc"]]
+    c.evaled = [bool(v) for v in snap["comm"]["evaled"]]
+    hist.acc_hist = [(int(e["round"]), [float(a) for a in e["accs"]])
+                     for e in snap["acc_hist"]]
+    hist.fair_hist = [(int(r), float(v))
+                      for r, v in zip(snap["fair_hist"]["rounds"],
+                                      snap["fair_hist"]["vals"])]
+    hist.cluster_hist = [(int(e["round"]), np.asarray(e["cid"]))
+                         for e in snap["cluster_hist"]]
+    hist.dp = float(snap["dp"])
+    hist.eo = float(snap["eo"])
+    hist.accs = [float(a) for a in snap["accs"]]
+    hist.node_acc = (None if snap["node_acc"] is None
+                     else np.asarray(snap["node_acc"]))
+
+
+def _ckpt_save(path: str, fp: str, carry: EngineCarry, hist: _History,
+               frames, next_segment: int, finished: bool):
+    """Snapshot the whole resumable run state at a segment boundary:
+    the drained :class:`EngineCarry` (algorithm state + data PRNG + netsim
+    channel + async gossip + topo EWMAs + crash chain), the eval/comm
+    histories, and every obs frame drained so far (replayed into the new
+    ``Obs`` on resume). Atomic via :func:`repro.checkpoint.save`."""
+    payload = {
+        "carry": jax.device_get(carry),
+        "hist": _hist_snapshot(hist),
+        "frames": [{"rounds": np.asarray(r, np.int64),
+                    "frame": tuple(None if l is None else np.asarray(l)
+                                   for l in f)}
+                   for r, f in frames],
+    }
+    checkpoint.save(path, payload, meta={
+        "fingerprint": fp, "next_segment": int(next_segment),
+        "finished": bool(finished)})
+
+
 def _drive_engine(eng, setup: AlgoSetup, hist: _History, k_data,
                   train_x, train_y, *, rounds, eval_every, warmup_rounds,
-                  obs=None):
+                  obs=None, ckpt=None, ckpt_fp=None):
     """Segment-engine driver: one dispatch + one host transfer per span.
     ``eng`` comes from the run's :class:`EngineCache` entry, so repeated
     runs of one config reuse its compiled segment programs. ``obs``: the
@@ -381,10 +487,47 @@ def _drive_engine(eng, setup: AlgoSetup, hist: _History, k_data,
     ``MetricsFrame`` (already drained in the one bulk ``device_get``) is
     handed over whole — on a ``target_acc`` hit the full segment is
     recorded (frames are pure observation; the early exit only truncates
-    the comm/cluster histories, matching the legacy loop's break)."""
+    the comm/cluster histories, matching the legacy loop's break).
+
+    ``ckpt``/``ckpt_fp``: crash-safe resume. After every segment the carry
+    + histories + frames are checkpointed (atomically); on entry, an
+    existing checkpoint with a matching fingerprint fast-forwards the run
+    to its ``next_segment``. Segments are deterministic functions of the
+    carry, so the resumed trajectory is bit-for-bit the uninterrupted one.
+    """
     tracer = obs.tracer if obs is not None else None
+    plan = segment_plan(rounds, eval_every, warmup_rounds)
     carry = eng.init_carry(setup.state, k_data)
-    for seg in segment_plan(rounds, eval_every, warmup_rounds):
+    start_idx = 0
+    frames_seen = []    # [(rounds [m], stacked MetricsFrame)] for re-save
+    if ckpt is not None and os.path.exists(ckpt):
+        payload, meta = checkpoint.load(ckpt)
+        if meta.get("fingerprint") != ckpt_fp:
+            raise ValueError(
+                f"checkpoint {ckpt!r} was written by a different run "
+                "configuration (fingerprint mismatch) — refusing to "
+                "resume from it; delete the file or pick a fresh path")
+        # rebuild the carry leaf-for-leaf on the freshly minted template:
+        # the checkpoint stores plain tuples/dicts, the template restores
+        # the NamedTuple treedef (and None placement) the engine donates
+        carry = jax.tree.unflatten(
+            jax.tree.structure(carry),
+            [jnp.asarray(l) for l in jax.tree.leaves(payload["carry"])])
+        _hist_restore(hist, payload["hist"])
+        for rec in payload["frames"]:
+            rnds = np.asarray(rec["rounds"])
+            fr = obs_mod.MetricsFrame(*rec["frame"])
+            frames_seen.append((rnds, fr))
+            if obs is not None:
+                obs.record_frames(rnds, fr)
+        if tracer is not None:
+            tracer.event("ckpt.resume", segment=int(meta["next_segment"]),
+                         finished=bool(meta.get("finished")))
+        if meta.get("finished"):
+            return
+        start_idx = int(meta["next_segment"])
+    for idx in range(start_idx, len(plan)):
+        seg = plan[idx]
         carry, outs = eng.run_segment(carry, seg.start, seg.length,
                                       train_x, train_y, warmup=seg.warmup,
                                       tracer=tracer)
@@ -413,6 +556,13 @@ def _drive_engine(eng, setup: AlgoSetup, hist: _History, k_data,
             for i in range(upto):
                 hist.cluster_hist.append(
                     (int(rnds[i]), np.asarray(outs["cluster_id"][i])))
+        if ckpt is not None:
+            if "frame" in outs:
+                frames_seen.append((rnds, outs["frame"]))
+            finished = hit or idx + 1 == len(plan)
+            with _sp(tracer, "ckpt.save", segment=idx, finished=finished):
+                _ckpt_save(ckpt, ckpt_fp, carry, hist, frames_seen,
+                           idx + 1, finished)
         if hit:
             break
 
@@ -438,6 +588,7 @@ def _drive_legacy(setup: AlgoSetup, hist: _History, k_data, train_x, train_y,
     topo_fn = None
     if tstate is not None and net is not None:
         topo_fn = jax.jit(functools.partial(topo_mod.advance, topo, net))
+    fstate = fault_fn = reset_fn = None
     if net is not None:
         conds_fn = jax.jit(
             lambda rnd, chan: netsim.advance_conditions(net, n, rnd, chan))
@@ -445,6 +596,12 @@ def _drive_legacy(setup: AlgoSetup, hist: _History, k_data, train_x, train_y,
             netwire.round_seconds, net, local_steps=local_steps))
         chan = netsim.init_channel(net, n)
         gossip = netsim.init_gossip(net, n, setup.mixable_of(setup.state))
+        if net.faults is not None:
+            # the SAME per-round hook the engine scans over (resil.advance /
+            # resil.reset_nodes), threaded through Python like chan/tstate
+            fstate = resil_mod.init_state(net, n, setup.state)
+            fault_fn = jax.jit(functools.partial(resil_mod.advance, net, n))
+            reset_fn = jax.jit(functools.partial(resil_mod.reset_nodes, n))
     frame_fn = None
     if ocfg is not None:
         tiers = obs_mod.tiers_of(net, n)
@@ -465,6 +622,12 @@ def _drive_legacy(setup: AlgoSetup, hist: _History, k_data, train_x, train_y,
         conds = published = None
         if net is not None:
             conds, chan = conds_fn(rnd, chan)
+            if fault_fn is not None:
+                conds, fstate, restarted = fault_fn(rnd, conds, fstate)
+                if restarted is not None:
+                    # engine parity: factory-reset BEFORE the round, so the
+                    # round (and the obs frame's prev mix) sees fresh state
+                    state = reset_fn(restarted, fstate.init, state)
             conds, published = netsim.apply_async(net, conds, gossip)
         prev = state
         fn = round_warm if rnd < warmup_rounds else round_main

@@ -44,6 +44,7 @@ class EngineCarry(NamedTuple):
     chan: Any = None     # netsim.ChannelState (Gilbert–Elliott) | None
     gossip: Any = None   # netsim.GossipState (async staleness) | None
     topo: Any = None     # repro.topo.TopoState (link EWMAs) | None
+    fault: Any = None    # repro.resil.FaultState (crash chain) | None
 
 
 def _stack_n(tree, n):

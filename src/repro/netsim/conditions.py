@@ -42,7 +42,8 @@ import jax.numpy as jnp
 
 from . import events as events_mod
 
-# per-stream fold_in tags
+# per-stream fold_in tags (repro.topo takes 7, repro.resil 8-11,
+# events.py 1000 — keep them disjoint)
 _DROP, _CHURN, _STRAGGLE, _BURST, _BURST_INIT, _TIER = 1, 2, 3, 4, 5, 6
 
 
@@ -53,6 +54,13 @@ class RoundConditions(NamedTuple):
     straggler: Any       # [n]    1 = node slow this round
     stale: Any = None    # [n]    1 = neighbors see this node's stale
     #                      snapshot (async gossip); None when sync
+    crashed: Any = None  # [n]    1 = node crashed (repro.resil fault
+    #                      chain; already folded into ``active``); None
+    #                      when the crash chain is off
+    corrupt: Any = None  # [n]    1 = node ships a corrupted payload this
+    #                      round (repro.resil); None when corruption off
+    fault_key: Any = None  # PRNG key for this round's payload noise
+    #                      (repro.resil.corrupt_view); None w/o corruption
 
 
 class ChannelState(NamedTuple):
@@ -133,6 +141,11 @@ class NetworkConfig:
     max_staleness: int = 3           # max rounds a straggler may lag before
                                      # it must publish fresh state; 0 makes
                                      # async_gossip bit-identical to sync
+    faults: Any = None               # repro.resil.FaultConfig | None —
+                                     # node crash/restart chain + payload
+                                     # corruption; riding here makes every
+                                     # FaultConfig field an EngineSpec
+                                     # cache-key component for free
 
     @classmethod
     def preset(cls, name: str, **overrides) -> "NetworkConfig":

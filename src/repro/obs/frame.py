@@ -58,6 +58,8 @@ class ObsConfig:
     comm: bool = True            # delivered edges, inclusion, tier bytes
     switches: bool = True        # FACADE cluster-assignment switches
     staleness_bins: int = 4      # gossip-age histogram width
+    faults: bool = True          # crashed/corrupted/quarantined counters
+    #                              (repro.resil; zeros when faults are off)
 
     def __post_init__(self):
         if self.staleness_bins < 1:
@@ -76,6 +78,9 @@ class MetricsFrame(NamedTuple):
     bytes_core: Any        # fresh bytes sent by core-tier nodes
     bytes_edge: Any        # fresh bytes sent by edge-tier nodes
     stale_hist: Any        # [bins] node count per gossip-staleness age
+    crashed: Any           # nodes down this round (repro.resil crash chain)
+    corrupted: Any         # nodes shipping a corrupted payload this round
+    quarantined: Any       # senders the robust guard quarantined
 
 
 FRAME_FIELDS = MetricsFrame._fields
@@ -150,8 +155,18 @@ def compute_frame(cfg: ObsConfig, n: int, tiers, prev_mix, new_mix,
     else:
         stale_hist = jnp.zeros((bins,), jnp.float32).at[0].set(float(n))
 
+    crashed = corrupted = quarantined = zero
+    if cfg.faults and conds is not None:
+        if conds.crashed is not None:
+            crashed = jnp.sum(jnp.asarray(conds.crashed, jnp.float32))
+        if conds.corrupt is not None:
+            corrupted = jnp.sum(jnp.asarray(conds.corrupt, jnp.float32))
+        if "quarantined" in info:
+            quarantined = jnp.asarray(info["quarantined"], jnp.float32)
+
     return MetricsFrame(update_norm=update_norm, param_norm=param_norm,
                         cluster_switches=switches,
                         delivered_edges=delivered, inclusion=inclusion,
                         bytes_core=bytes_core, bytes_edge=bytes_edge,
-                        stale_hist=stale_hist)
+                        stale_hist=stale_hist, crashed=crashed,
+                        corrupted=corrupted, quarantined=quarantined)

@@ -1,0 +1,39 @@
+"""repro.resil — node-fault injection, robust gossip, crash-safe runs.
+
+netsim simulates unreliable *links*; this subsystem simulates unreliable
+*nodes* and the machinery that survives them:
+
+* :mod:`.faults` — :class:`FaultConfig` (crash/restart Markov chain,
+  restart mode, payload corruption) on ``NetworkConfig.faults``; the
+  carried :class:`FaultState`; :func:`advance`, the per-round entry point
+  shared by the scan engine and the legacy loop; :func:`corrupt_view`
+  (per-transmission payload mangling composed into
+  ``netwire.sent_view``); and the robust-aggregation primitives behind
+  ``bindings.gossip_mix(guard=...)`` — non-finite quarantine + norm
+  clipping so one poisoned node degrades accuracy smoothly instead of
+  NaN'ing every cluster core.
+
+Crash-safe checkpoint/resume lives in :mod:`repro.checkpoint` (atomic
+saves) + ``run_experiment(ckpt=...)`` / ``run_sweep(ckpt_dir=...)``
+(segment-boundary snapshots, bit-for-bit resume, preemption-safe grids).
+
+Usage — any algorithm, either driver::
+
+    from repro.netsim import NetworkConfig
+    from repro.resil import FaultConfig
+
+    net = NetworkConfig.preset(
+        "edge-v2",
+        faults=FaultConfig(crash_rate=0.05, restart_rate=0.5,
+                           corrupt_rate=0.05, corrupt_mode="nan"))
+    res = run_experiment("facade", cfg, ds, rounds=100, net=net,
+                         ckpt="results/run.ckpt.npz")
+
+``faults=None`` and every zero-rate off-switch are bit-for-bit the
+legacy path for all five algorithms on both drivers
+(``tests/test_resil.py``).
+"""
+from .faults import (CORRUPT_MODES, RESTART_MODES,  # noqa: F401
+                     FaultConfig, FaultState, advance, corrupt_view,
+                     faults_of, guard_of, init_state, node_finite,
+                     node_norm, quarantined_count, reset_nodes)

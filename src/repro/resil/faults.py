@@ -1,0 +1,275 @@
+"""On-device node-fault injection: crashes, restarts, payload corruption.
+
+netsim (PRs 1/4) stresses the *links* — drops, churn blocks, bursty loss,
+stragglers. This module stresses the *nodes*: a process can crash and stay
+down for a random number of rounds (a two-state Markov chain, the node
+analogue of the Gilbert–Elliott link channel), come back either with the
+state it crashed with (``rejoin-stale``) or factory-reset to its round-0
+init (``reset``), and a live node can ship a corrupted payload — additive
+noise, a blown-up scale, or NaNs — to every neighbor for a round.
+
+Everything is seeded and static: a frozen :class:`FaultConfig` lives on
+``NetworkConfig.faults`` (so it is an ``EngineSpec`` cache-key component
+for free), the carried :class:`FaultState` rides the donated
+``EngineCarry`` next to ``chan``/``gossip``, and :func:`advance` is THE
+shared per-round entry point both drivers call — the scan engine inside
+``lax.scan``, the legacy loop through Python — the same discipline that
+keeps ``netsim.advance_conditions`` / ``topo.advance`` engine/legacy
+bit-identical.
+
+Semantics, composed entirely through existing netsim contracts:
+
+* a crashed node is ``active == 0`` for the round:
+  ``topology.effective_adjacency`` zeroes its rows AND columns (it
+  neither sends nor receives, so its directed edges cost 0 bytes), and
+  ``netsim.round_time`` multiplies by ``active`` (it never gates
+  ``round_seconds``) — byte/time honesty needs no new accounting code;
+* a corrupting node stays active: its payload is mangled in
+  :func:`corrupt_view` (composed with the async stale view by
+  ``netwire.sent_view``) but its OWN state is untouched — corruption is
+  per-transmission, not persistent;
+* the robust-aggregation guard (:func:`guard_of`,
+  ``bindings.gossip_mix(guard=...)``) quarantines non-finite senders and
+  norm-clips the rest; it is statically OFF unless ``robust`` is set and
+  ``corrupt_rate > 0``, so every zero-rate off-switch stays bit-for-bit
+  the legacy arithmetic.
+
+All randomness shares netsim's ``fold_in(fold_in(PRNGKey(seed), tag),
+round)`` stream scheme with tags disjoint from every existing consumer
+(conditions.py uses 1–6, repro.topo uses 7, events.py uses 1000).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.netsim.conditions import _stream
+
+# fold_in stream tags — MUST stay disjoint from netsim.conditions (1-6),
+# repro.topo (7) and netsim.events (1000)
+_CRASH, _RESTART, _CORRUPT, _PAYLOAD = 8, 9, 10, 11
+
+RESTART_MODES = ("rejoin-stale", "reset")
+CORRUPT_MODES = ("noise", "scale", "nan")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Static node-fault model. Lives on ``NetworkConfig.faults``, so every
+    field forks the ``EngineSpec`` cache key through the ``net`` component
+    (pinned by ``tests/test_resil.py`` / ``tests/test_property.py``).
+
+    Crash chain (per node, per round): an up node goes down with
+    ``crash_rate``; a down node comes back with ``restart_rate`` —
+    expected outage length is ``1 / restart_rate`` rounds. ``restart_mode``
+    picks what a restarted node rejoins with: the state it crashed with
+    (``rejoin-stale``, the frozen-params churn semantics) or its round-0
+    init (``reset``, a factory-fresh process).
+
+    Corruption (per live node, per round, rate ``corrupt_rate``): the
+    node's outgoing payload — never its own state — is mangled per
+    ``corrupt_mode``: ``noise`` adds ``corrupt_scale``-scaled Gaussian
+    noise, ``scale`` multiplies by ``corrupt_scale``, ``nan`` poisons
+    every float leaf. ``robust``/``clip`` configure the receiving side's
+    aggregation guard (see ``bindings.gossip_mix``): non-finite payloads
+    are quarantined and finite ones norm-clipped to ``clip`` times the
+    receiver's own norm. Zero rates disable the corresponding machinery
+    bit-for-bit.
+    """
+    crash_rate: float = 0.0
+    restart_rate: float = 0.5
+    restart_mode: str = "rejoin-stale"
+    corrupt_rate: float = 0.0
+    corrupt_mode: str = "noise"
+    corrupt_scale: float = 100.0
+    robust: bool = True
+    clip: float = 3.0
+
+    def __post_init__(self):
+        if self.restart_mode not in RESTART_MODES:
+            raise ValueError(f"restart_mode must be one of {RESTART_MODES}, "
+                             f"got {self.restart_mode!r}")
+        if self.corrupt_mode not in CORRUPT_MODES:
+            raise ValueError(f"corrupt_mode must be one of {CORRUPT_MODES}, "
+                             f"got {self.corrupt_mode!r}")
+        for name in ("crash_rate", "restart_rate", "corrupt_rate"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1], got {v}")
+        if self.clip <= 0:
+            raise ValueError(f"clip must be > 0, got {self.clip}")
+
+
+class FaultState(NamedTuple):
+    """On-device crash-chain state, carried through the engine's scan (or
+    the legacy Python loop) like ``ChannelState``/``GossipState``.
+    ``None`` in the carry whenever ``crash_rate == 0`` — corruption alone
+    is memoryless and needs no state."""
+    down: Any            # [n] float32 {0,1}: 1 = node is down this round
+    init: Any = None     # round-0 state copy (restart_mode="reset" only)
+
+
+def faults_of(net) -> "FaultConfig | None":
+    """The run's fault model, ``None`` when faults are off (no ``net`` or
+    no ``net.faults``)."""
+    return None if net is None else net.faults
+
+
+def guard_of(fcfg: "FaultConfig | None") -> "FaultConfig | None":
+    """The robust-aggregation guard to hand ``bindings.gossip_mix`` —
+    non-None ONLY when payloads can actually be corrupted AND the config
+    asks for robustness. Gating on ``corrupt_rate > 0`` (not just
+    ``robust``) keeps every zero-rate run on the exact legacy arithmetic:
+    the guard's row renormalization would otherwise perturb bits even on
+    honest data (``mixing_matrix`` rows are row-stochastic only to float
+    tolerance)."""
+    if fcfg is None or not fcfg.robust or fcfg.corrupt_rate <= 0:
+        return None
+    return fcfg
+
+
+def init_state(net, n: int, state=None) -> "FaultState | None":
+    """Mint the run's :class:`FaultState` (``None`` when the crash chain
+    is off). ``state`` is the run's initial algorithm state; under
+    ``restart_mode="reset"`` a leaf-for-leaf COPY is kept so restarted
+    nodes can be factory-reset — copied so the buffer never aliases the
+    donated training state (the ``init_gossip`` discipline)."""
+    fcfg = faults_of(net)
+    if fcfg is None or fcfg.crash_rate <= 0:
+        return None
+    init = None
+    if fcfg.restart_mode == "reset":
+        if state is None:
+            raise ValueError('restart_mode="reset" needs the initial '
+                             "algorithm state to restore nodes from")
+        init = jax.tree.map(jnp.copy, state)
+    return FaultState(down=jnp.zeros((n,), jnp.float32), init=init)
+
+
+def advance(net, n: int, rnd, conds, fstate):
+    """THE shared per-round fault hook for both drivers, called right
+    after ``netsim.advance_conditions`` (and before ``apply_async``, so a
+    corrupted payload corrupts whatever the node delivers — fresh or
+    stale snapshot alike).
+
+    Returns ``(conds', fstate', restarted)``: conditions with crashed
+    nodes folded into ``active`` (+ the round's ``crashed``/``corrupt``
+    masks and payload-noise key), the advanced crash chain, and — under
+    ``restart_mode="reset"`` only — the {0,1} mask of nodes restarting
+    THIS round (the driver then applies :func:`reset_nodes` before the
+    round function; ``None`` means nothing to reset, statically). A
+    ``None``/zero-rate fault config passes everything through untouched.
+    """
+    fcfg = faults_of(net)
+    if fcfg is None or conds is None:
+        return conds, fstate, None
+    restarted = None
+    if fcfg.crash_rate > 0:
+        u_down = jax.random.uniform(_stream(net, _CRASH, rnd), (n,))
+        u_up = jax.random.uniform(_stream(net, _RESTART, rnd), (n,))
+        was_down = fstate.down > 0
+        come_up = u_up < fcfg.restart_rate
+        down = jnp.where(was_down, ~come_up,
+                         u_down < fcfg.crash_rate).astype(jnp.float32)
+        conds = conds._replace(active=conds.active * (1.0 - down),
+                               crashed=down)
+        if fcfg.restart_mode == "reset":
+            restarted = (was_down & come_up).astype(jnp.float32)
+        fstate = fstate._replace(down=down)
+    if fcfg.corrupt_rate > 0:
+        u_cor = jax.random.uniform(_stream(net, _CORRUPT, rnd), (n,))
+        # crashed/churned-out nodes deliver nothing — only live senders
+        # can corrupt, so the masks stay disjoint
+        corrupt = (u_cor < fcfg.corrupt_rate).astype(jnp.float32)
+        conds = conds._replace(corrupt=corrupt * conds.active,
+                               fault_key=_stream(net, _PAYLOAD, rnd))
+    return conds, fstate, restarted
+
+
+def reset_nodes(n: int, restarted, init_state, state):
+    """Factory-reset the restarting nodes: every node-stacked leaf
+    (leading axis ``n``) takes its round-0 value where ``restarted == 1``.
+    Scalars (round counters) and unsigned-int leaves (PRNG keys — shape
+    ``(2,)`` uint32, which could collide with ``n == 2``) are shared, not
+    per-node, and pass through untouched."""
+    def pick(i, s):
+        if getattr(s, "ndim", 0) < 1 or s.shape[0] != n:
+            return s
+        if jnp.issubdtype(s.dtype, jnp.unsignedinteger):
+            return s
+        m = restarted.reshape((n,) + (1,) * (s.ndim - 1))
+        return jnp.where(m > 0, i, s).astype(s.dtype)
+
+    return jax.tree.map(pick, init_state, state)
+
+
+# ------------------------------------------------------ payload corruption
+def corrupt_view(fcfg: FaultConfig, conds, tree):
+    """Mangle the node-stacked payload ``tree`` along the leading axis
+    where ``conds.corrupt == 1``. Float leaves only (cluster ids and
+    round counters ship uncorrupted — int payloads are checksummed in any
+    real transport); per-leaf noise keys fold the leaf index into the
+    round's ``fault_key``, so both drivers draw identical noise."""
+    mask, key = conds.corrupt, conds.fault_key
+    leaves, treedef = jax.tree.flatten(tree)
+    out = []
+    for i, leaf in enumerate(leaves):
+        if not jnp.issubdtype(leaf.dtype, jnp.floating):
+            out.append(leaf)
+            continue
+        if fcfg.corrupt_mode == "noise":
+            noise = jax.random.normal(jax.random.fold_in(key, i),
+                                      leaf.shape, jnp.float32)
+            bad = leaf + (fcfg.corrupt_scale * noise).astype(leaf.dtype)
+        elif fcfg.corrupt_mode == "scale":
+            bad = leaf * jnp.asarray(fcfg.corrupt_scale, leaf.dtype)
+        else:  # "nan"
+            bad = leaf * jnp.asarray(jnp.nan, leaf.dtype)
+        m = mask.reshape((mask.shape[0],) + (1,) * (leaf.ndim - 1))
+        out.append(jnp.where(m > 0, bad, leaf).astype(leaf.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+# ------------------------------------------------- robust-guard primitives
+def node_finite(tree):
+    """[n] float32: 1 where EVERY float leaf of the node is finite — the
+    quarantine predicate (int leaves carry no poison)."""
+    ok = None
+    for leaf in jax.tree.leaves(tree):
+        if not jnp.issubdtype(leaf.dtype, jnp.floating):
+            continue
+        n = leaf.shape[0]
+        fin = jnp.all(jnp.isfinite(
+            jnp.asarray(leaf, jnp.float32).reshape(n, -1)), axis=1)
+        fin = fin.astype(jnp.float32)
+        ok = fin if ok is None else ok * fin
+    if ok is None:
+        raise ValueError("node_finite needs at least one float leaf")
+    return ok
+
+
+def node_norm(tree):
+    """[n] float32: per-node global L2 over float leaves. NaN/inf for
+    quarantined nodes — callers sanitize with :func:`node_finite`."""
+    sq = None
+    for leaf in jax.tree.leaves(tree):
+        if not jnp.issubdtype(leaf.dtype, jnp.floating):
+            continue
+        n = leaf.shape[0]
+        s = jnp.sum(jnp.square(
+            jnp.asarray(leaf, jnp.float32)).reshape(n, -1), axis=1)
+        sq = s if sq is None else sq + s
+    if sq is None:
+        raise ValueError("node_norm needs at least one float leaf")
+    return jnp.sqrt(sq)
+
+
+def quarantined_count(guard, delivered):
+    """float32 scalar: number of senders the guard quarantined this round
+    (0 statically when the guard is off) — the obs-frame counter."""
+    if guard is None or delivered is None:
+        return jnp.zeros((), jnp.float32)
+    return jnp.sum(1.0 - node_finite(delivered))

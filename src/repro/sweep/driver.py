@@ -11,6 +11,16 @@ programs too, and all cells over one dataset+model share the evaluator.
 Warm-cache runs are bit-identical to fresh ``run_experiment`` calls
 (``tests/test_sweep.py`` pins this for all five algorithms, with and
 without netsim).
+
+Long grids survive preemption two ways (``ckpt_dir=``): every engine run
+checkpoints per segment (``run_experiment(ckpt=...)``) so a killed cell
+resumes mid-run, and every COMPLETED cell leaves a summary + manifest
+behind so a rerun of the same sweep skips it outright (matched on a
+content fingerprint of the cell's full static description — algorithm,
+config, netsim preset incl. faults, dataset content, seeds, targets).
+A cell that raises no longer kills the grid: the error is recorded on its
+:class:`CellResult` (and as a ``sweep.cell_failed`` tracer event) and the
+remaining cells run; only a sweep where EVERY cell failed raises.
 """
 from __future__ import annotations
 
@@ -21,10 +31,10 @@ import pathlib
 import time
 from typing import Any, Sequence
 
-from repro.core.cache import EngineCache
+from repro.core.cache import EngineCache, data_fingerprint
 from repro.core.runner import run_experiment
 from repro.netsim import NetworkConfig
-from repro.obs import RunManifest
+from repro.obs import RunManifest, fingerprint
 
 from .aggregate import aggregate_cell
 
@@ -58,6 +68,11 @@ class CellResult:
     cache_stats: dict = dataclasses.field(default_factory=dict)
     #                      cumulative EngineCache.stats() right after this
     #                      cell — the warm-after-first-seed story per cell
+    error: "str | None" = None   # repr of the exception that killed the
+    #                      cell (results/summary then hold no metrics)
+    skipped: bool = False  # completed in an earlier sweep run and skipped
+    #                      here (summary reloaded from ckpt_dir; no
+    #                      per-seed RunResults)
 
 
 @dataclasses.dataclass
@@ -88,6 +103,8 @@ class SweepResult:
                     for k, v in c.cell.kwargs.items()},
                 "summary": c.summary,
                 "cache": c.cache_stats,
+                "error": c.error,
+                "skipped": c.skipped,
             }
         return {"seeds": list(self.seeds), "wall_s": self.wall_s,
                 "cache": self.cache.stats(), "cells": cells}
@@ -99,9 +116,22 @@ class SweepResult:
         return path
 
 
+def _cell_fingerprint(cell: SweepCell, net, seeds, targets) -> str:
+    """Content hash of EVERYTHING that shapes a cell's summary. Built from
+    reprs of frozen configs plus :func:`data_fingerprint` of the dataset —
+    NEVER ``repr(cell)``, whose dataset repr can embed memory addresses
+    and would break skip-on-rerun across processes."""
+    return fingerprint({
+        "name": cell.name, "algo": cell.algo, "cfg": repr(cell.cfg),
+        "rounds": cell.rounds, "net": repr(net),
+        "kwargs": {k: repr(v) for k, v in sorted(cell.kwargs.items())},
+        "data": data_fingerprint(cell.dataset),
+        "seeds": list(seeds), "targets": list(targets)})
+
+
 def run_sweep(cells: Sequence[SweepCell], seeds: Sequence[int], *,
               cache: EngineCache | None = None, targets: Sequence[float] = (),
-              json_path=None, obs=None,
+              json_path=None, obs=None, ckpt_dir=None,
               verbose: bool = False) -> SweepResult:
     """Run every cell over every seed, reusing compiled programs.
 
@@ -114,6 +144,15 @@ def run_sweep(cells: Sequence[SweepCell], seeds: Sequence[int], *,
     ``obs``: optional :class:`repro.obs.Obs` shared by every run of the
     sweep — per-cell ``sweep.cell`` spans wrap the usual per-run
     instrumentation, and the sweep manifest picks up its timing rollup.
+    ``ckpt_dir``: if set, the sweep is preemption-safe — engine runs
+    checkpoint per segment under ``<ckpt_dir>/<cell>-s<seed>.npz``, and a
+    completed cell writes ``<cell>.summary.json`` + ``<cell>.manifest.json``
+    there; rerunning the same sweep skips completed cells (fingerprint
+    match) and resumes the one that was killed mid-run.
+
+    A failing cell is recorded (``CellResult.error``, a
+    ``sweep.cell_failed`` event) and the grid CONTINUES; ``RuntimeError``
+    is raised only when every cell failed.
     """
     cache = cache if cache is not None else EngineCache()
     tracer = obs.tracer if obs is not None else None
@@ -122,33 +161,87 @@ def run_sweep(cells: Sequence[SweepCell], seeds: Sequence[int], *,
     if len(set(names)) != len(names):
         raise ValueError(f"duplicate sweep cell names: {names}")
     for cell in cells:
-        if "seed" in cell.kwargs:
-            raise ValueError(
-                f"cell {cell.name!r} sets 'seed' in kwargs; seeds are the "
-                "sweep axis — pass them to run_sweep instead")
+        for owned in ("seed", "ckpt"):
+            if owned in cell.kwargs:
+                raise ValueError(
+                    f"cell {cell.name!r} sets {owned!r} in kwargs; "
+                    f"run_sweep owns {owned!r} — pass seeds/ckpt_dir to "
+                    "run_sweep instead")
+    if ckpt_dir is not None:
+        ckpt_dir = pathlib.Path(ckpt_dir)
+        ckpt_dir.mkdir(parents=True, exist_ok=True)
 
     t0 = time.perf_counter()
     out = []
     for cell in cells:
         net = cell.resolved_net()
+        cell_fp = (None if ckpt_dir is None
+                   else _cell_fingerprint(cell, net, seeds, targets))
+        if ckpt_dir is not None:
+            man_path = ckpt_dir / f"{cell.name}.manifest.json"
+            sum_path = ckpt_dir / f"{cell.name}.summary.json"
+            if man_path.exists() and sum_path.exists():
+                man = RunManifest.load(man_path)
+                if man.settings.get("cell_fingerprint") == cell_fp:
+                    summary = json.loads(sum_path.read_text())
+                    out.append(CellResult(cell, seeds, [], summary,
+                                          cache_stats=cache.stats(),
+                                          skipped=True))
+                    if tracer is not None:
+                        tracer.event("sweep.cell_skipped", cell=cell.name)
+                    if verbose:
+                        print(f"  [sweep] {cell.name}: skipped "
+                              "(completed in an earlier run)")
+                    continue
         results = []
         span = (tracer.span("sweep.cell", cell=cell.name)
                 if tracer is not None else contextlib.nullcontext())
-        with span:
-            for seed in seeds:
-                results.append(run_experiment(
-                    cell.algo, cell.cfg, cell.dataset, rounds=cell.rounds,
-                    seed=seed, net=net, cache=cache, obs=obs,
-                    **cell.kwargs))
-        summary = aggregate_cell(results, targets=targets)
+        try:
+            with span:
+                for seed in seeds:
+                    ckpt = None
+                    if (ckpt_dir is not None
+                            and cell.kwargs.get("engine", True)):
+                        ckpt = str(ckpt_dir / f"{cell.name}-s{seed}.npz")
+                    results.append(run_experiment(
+                        cell.algo, cell.cfg, cell.dataset,
+                        rounds=cell.rounds, seed=seed, net=net,
+                        cache=cache, obs=obs, ckpt=ckpt, **cell.kwargs))
+            summary = aggregate_cell(results, targets=targets)
+        except Exception as e:  # noqa: BLE001 — one bad cell, whole grid
+            out.append(CellResult(cell, seeds, results,
+                                  {"error": repr(e)},
+                                  cache_stats=cache.stats(),
+                                  error=repr(e)))
+            if tracer is not None:
+                tracer.event("sweep.cell_failed", cell=cell.name,
+                             error=repr(e))
+            if verbose:
+                print(f"  [sweep] {cell.name}: FAILED ({e!r}); "
+                      "continuing with the remaining cells")
+            continue
         out.append(CellResult(cell, seeds, results, summary,
                               cache_stats=cache.stats()))
+        if ckpt_dir is not None:
+            sum_path.write_text(json.dumps(summary, indent=2,
+                                           default=float))
+            RunManifest.build(
+                kind="sweep-cell", name=cell.name, spec=repr(cell.cfg),
+                settings={"cell_fingerprint": cell_fp,
+                          "seeds": list(seeds), "targets": list(targets),
+                          "net": repr(net)},
+                cache=cache.stats()).save(man_path)
         if verbose:
-            fa = summary["best_fair_acc"]
-            print(f"  [sweep] {cell.name}: best_fair_acc="
-                  f"{fa['mean']:.3f}±{fa['std']:.3f} over "
-                  f"{len(seeds)} seeds ({cache.stats()['compiles']} "
-                  "compiles so far)")
+            fa = summary.get("best_fair_acc")
+            if fa is not None:
+                print(f"  [sweep] {cell.name}: best_fair_acc="
+                      f"{fa['mean']:.3f}±{fa['std']:.3f} over "
+                      f"{len(seeds)} seeds ({cache.stats()['compiles']} "
+                      "compiles so far)")
+    if out and all(c.error is not None for c in out):
+        raise RuntimeError(
+            f"every sweep cell failed ({len(out)}/{len(out)}): "
+            + "; ".join(f"{c.cell.name}: {c.error}" for c in out))
     sweep = SweepResult(out, seeds, cache, time.perf_counter() - t0)
     if json_path is not None:
         path = sweep.save(json_path)

@@ -164,6 +164,7 @@ _OBS_PERTURB = {
     "comm": lambda v: not v,
     "switches": lambda v: not v,
     "staleness_bins": lambda v: v + 1,
+    "faults": lambda v: not v,
 }
 
 

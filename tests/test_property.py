@@ -18,6 +18,7 @@ from repro.fairness.metrics import (demographic_parity, equalized_odds,
 from repro.models.base import CNNConfig
 from repro.netsim import (BurstConfig, BurstFailure, LinkClasses,
                           NetworkConfig)
+from repro.resil import FaultConfig
 from repro.models import transformer
 from repro.models.attention import chunked_sdpa, sdpa
 from repro.obs import ObsConfig
@@ -311,6 +312,9 @@ _NET_PERTURB = {
                               v, edge_fraction=(v.edge_fraction + 0.1) % 1.0)),
     "async_gossip": lambda v: not v,
     "max_staleness": lambda v: v + 1,
+    "faults": lambda v: (FaultConfig(crash_rate=0.1) if v is None
+                         else dataclasses.replace(
+                             v, crash_rate=(v.crash_rate + 0.1) % 1.0)),
 }
 
 
@@ -376,6 +380,31 @@ def test_engine_cache_key_obs_field_perturbation(fields, perturb):
     mutated = dataclasses.replace(
         base, obs=dataclasses.replace(
             obs, **{perturb: _OBS_PERTURB[perturb](getattr(obs, perturb))}))
+    assert mutated != base
+    table = {base: "b", mutated: "m"}
+    assert table[base] == "b" and table[mutated] == "m"
+
+
+# Every FaultConfig field rides the key through ``net.faults`` — a
+# collision would hand a sweep cell a program compiled for a different
+# fault model. The table lives in tests/test_resil.py next to its
+# fields-coverage check; importing it here keeps the twins in lockstep.
+from test_resil import _FAULT_PERTURB  # noqa: E402
+
+
+@_settings
+@given(fields=_SPEC_FIELDS, perturb=st.sampled_from(sorted(_FAULT_PERTURB)))
+def test_engine_cache_key_fault_field_perturbation(fields, perturb):
+    a = _spec_from(fields)
+    net = a.net if a.net is not None else NetworkConfig.preset("lan")
+    faults = (net.faults if net.faults is not None
+              else FaultConfig(crash_rate=0.1))
+    base = dataclasses.replace(a, net=dataclasses.replace(
+        net, faults=faults))
+    mutated = dataclasses.replace(
+        base, net=dataclasses.replace(net, faults=dataclasses.replace(
+            faults,
+            **{perturb: _FAULT_PERTURB[perturb](getattr(faults, perturb))})))
     assert mutated != base
     table = {base: "b", mutated: "m"}
     assert table[base] == "b" and table[mutated] == "m"
