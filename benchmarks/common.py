@@ -9,6 +9,7 @@ uses the paper-shaped configuration (slow on CPU).
 from __future__ import annotations
 
 import json
+import os
 import pathlib
 import time
 
@@ -73,6 +74,18 @@ def write_bench(name: str, payload: dict) -> pathlib.Path:
     payload = dict(payload)
     payload["manifest"] = bench_stamp(name, payload)
     return save(f"BENCH_{name}", payload)
+
+
+def engine_cache(max_entries: int | None = None):
+    """Build the benchmark-suite :class:`repro.core.cache.EngineCache`,
+    honoring ``REPRO_XLA_CACHE_DIR``: when that env var names a directory,
+    compiled XLA executables persist there across benchmark PROCESSES
+    (``EngineCache(persist_dir=...)``), so a re-run of ``-m benchmarks.run``
+    or a CI shard starts warm. Unset => a plain in-process cache."""
+    from repro.core.cache import EngineCache
+
+    return EngineCache(persist_dir=os.environ.get("REPRO_XLA_CACHE_DIR")
+                       or None, max_entries=max_entries)
 
 
 def table(headers, rows) -> str:

@@ -144,6 +144,41 @@ def run(quick: bool = True) -> dict:
               f"{ckpt_rec['metrics_parity']}, carry parity "
               f"{ckpt_rec['carry_parity']})")
 
+    # persist-dir smoke: a run over EngineCache(persist_dir=...) must stay
+    # bit-for-bit a plain run AND leave serialized executables on disk
+    try:
+        from . import warm_start
+        warm_rec = warm_start.smoke()
+    except Exception as e:
+        warm_rec = {"status": "fail", "error": repr(e)}
+        print(f"persist smoke: FAIL ({e!r})")
+    else:
+        print(f"persist smoke: {warm_rec['status']} "
+              f"({warm_rec['persisted_files']} files persisted)")
+
+    # pipeline smoke: pipeline=True bit-parity with the serialized driver
+    try:
+        from . import pipeline as pipeline_bench
+        pipe_rec = pipeline_bench.smoke()
+    except Exception as e:
+        pipe_rec = {"status": "fail", "error": repr(e)}
+        print(f"pipeline smoke: FAIL ({e!r})")
+    else:
+        print(f"pipeline smoke: {pipe_rec['status']} "
+              f"({pipe_rec['total_bytes']/1e3:.1f} KB)")
+
+    # pipeline+ckpt smoke: a checkpointed pipelined run matches serialized
+    # and leaves a resumable archive behind
+    try:
+        from . import pipeline as pipeline_bench
+        pipeckpt_rec = pipeline_bench.smoke_ckpt()
+    except Exception as e:
+        pipeckpt_rec = {"status": "fail", "error": repr(e)}
+        print(f"pipeline+ckpt smoke: FAIL ({e!r})")
+    else:
+        print(f"pipeline+ckpt smoke: {pipeckpt_rec['status']} "
+              f"(ckpt written {pipeckpt_rec['ckpt_written']})")
+
     recs = [r for r in load("dryrun_*.jsonl") if r.get("tag", "") == ""]
     if not recs:
         print("no dry-run records; run `python -m repro.launch.dryrun --all` "
@@ -151,7 +186,9 @@ def run(quick: bool = True) -> dict:
         return {"netsim_smoke": net_rec, "netsim_v2_smoke": v2_rec,
                 "engine_smoke": eng_rec, "sweep_smoke": sweep_rec,
                 "topo_smoke": topo_rec, "obs_smoke": obs_rec,
-                "resil_smoke": resil_rec, "ckpt_smoke": ckpt_rec}
+                "resil_smoke": resil_rec, "ckpt_smoke": ckpt_rec,
+                "persist_smoke": warm_rec, "pipeline_smoke": pipe_rec,
+                "pipeline_ckpt_smoke": pipeckpt_rec}
     rows = []
     ok = fail = skip = 0
     for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
@@ -179,7 +216,9 @@ def run(quick: bool = True) -> dict:
                "netsim_smoke": net_rec, "netsim_v2_smoke": v2_rec,
                "engine_smoke": eng_rec, "sweep_smoke": sweep_rec,
                "topo_smoke": topo_rec, "obs_smoke": obs_rec,
-               "resil_smoke": resil_rec, "ckpt_smoke": ckpt_rec}
+               "resil_smoke": resil_rec, "ckpt_smoke": ckpt_rec,
+               "persist_smoke": warm_rec, "pipeline_smoke": pipe_rec,
+               "pipeline_ckpt_smoke": pipeckpt_rec}
     common.save("dryrun_matrix", payload)
     return payload
 

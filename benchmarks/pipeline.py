@@ -1,0 +1,190 @@
+"""Pipelined segment dispatch: overlap evidence + rounds/sec for the
+double-buffered driver.
+
+The serialized engine loop runs dispatch -> drain -> host bookkeeping ->
+dispatch ... per segment, so the host sits in a blocking ``device_get``
+while the device computes, then the device idles while the host drains
+scalars, reduces the eval and (under ``ckpt``) snapshots the carry — the
+``dispatch`` vs ``drain`` tracer spans PR 6 added show exactly this gap.
+``run_experiment(pipeline=True)`` dispatches segment ``t+1`` (and
+enqueues ``t``'s eval) before draining ``t``, overlapping all host work
+with device compute.
+
+Two measurements over the ``round_throughput`` micro config (32-node
+GN-LeNet, few-ms rounds, driver-bound), warm over one shared
+``EngineCache``:
+
+* **Overlap (the headline):** tracer-measured time the host spends
+  BLOCKED in ``drain`` waiting on the device, serialized vs pipelined.
+  Pipelining drains a segment only after the next one was dispatched,
+  so by drain time the device work is already done — the blocking wait
+  collapses to a residual (~99% reduction measured here). This is the
+  direct evidence the overlap works, and it is backend-independent.
+* **rounds/sec**, ``plain`` and per-segment-``ckpt`` scenarios,
+  best-of-``REPEATS``. CAVEAT: on a single-core CPU host (this box:
+  ``nproc == 1``) "device" compute and host work time-slice the same
+  core, so removing the blocking wait cannot reduce wall-clock — the
+  numbers here are a parity/no-regression gate. The wall-clock win
+  materializes when host and device are separate resources (any real
+  accelerator, or a multi-core CPU under per-segment checkpoint I/O);
+  the cross-PROCESS rounds/sec win of the always-warm engine is
+  measured by ``benchmarks/warm_start.py`` (2.5x to first dispatch,
+  ``BENCH_warmstart.json``).
+
+Writes ``results/bench/BENCH_pipeline.json``; ``all_parity`` gates that
+every timed variant stayed bit-identical.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.cache import EngineCache
+from repro.core.runner import run_experiment
+from repro.obs import Obs
+
+from . import common
+
+N_NODES = 32
+EVAL_EVERY = 5
+LOCAL_STEPS = 1
+BATCH = 2
+REPEATS = 3
+
+
+def _base_kwargs(rounds, cache):
+    return dict(rounds=rounds, k=2, degree=4, local_steps=LOCAL_STEPS,
+                batch_size=BATCH, lr=0.05, eval_every=EVAL_EVERY, seed=0,
+                cache=cache)
+
+
+def _drain_share(algo, cfg, ds, rounds, cache, pipeline: bool) -> dict:
+    """Tracer rollup of one warm run: how much wall time the host spent
+    blocked in ``drain`` (device wait) vs the whole ``run`` span."""
+    obs = Obs(config=None)              # spans only: no device-side frames
+    run_experiment(algo, cfg, ds, pipeline=pipeline, obs=obs,
+                   **_base_kwargs(rounds, cache))
+    roll = obs.tracer.rollup()["spans"]
+    run_s = roll.get("run", {}).get("total_s", 0.0)
+    drain_s = roll.get("drain", {}).get("total_s", 0.0)
+    return {"run_s": run_s, "drain_s": drain_s,
+            "drain_share": drain_s / run_s if run_s else 0.0}
+
+
+def _time_variant(algo, cfg, ds, rounds, cache, pipeline: bool,
+                  ckpt_dir=None) -> float:
+    kw = _base_kwargs(rounds, cache)
+    best = float("inf")
+    for rep in range(REPEATS):
+        ck = (None if ckpt_dir is None else
+              os.path.join(ckpt_dir, f"{algo}-{pipeline}-{rep}.npz"))
+        t0 = time.perf_counter()
+        run_experiment(algo, cfg, ds, pipeline=pipeline, ckpt=ck, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _parity(algo, cfg, ds, rounds, cache) -> bool:
+    kw = _base_kwargs(rounds, cache)
+    off = run_experiment(algo, cfg, ds, pipeline=False, **kw)
+    on = run_experiment(algo, cfg, ds, pipeline=True, **kw)
+    return (off.acc_per_cluster == on.acc_per_cluster
+            and off.comm.bytes == on.comm.bytes
+            and off.comm.seconds == on.comm.seconds
+            and off.dp == on.dp and off.eo == on.eo)
+
+
+def run(quick: bool = True) -> dict:
+    rounds = 60 if quick else 200
+    cfg, ds = common.micro_config(N_NODES)
+    cache = EngineCache()
+    results, rows = {}, []
+    with tempfile.TemporaryDirectory(prefix="repro-pipe-bench-") as td:
+        for algo in ("facade", "el"):
+            parity = _parity(algo, cfg, ds, rounds, cache)  # also warms
+            ser = _drain_share(algo, cfg, ds, rounds, cache, False)
+            pipe = _drain_share(algo, cfg, ds, rounds, cache, True)
+            reduction = (1.0 - pipe["drain_s"] / ser["drain_s"]
+                         if ser["drain_s"] else 0.0)
+            r = {"parity": parity,
+                 "blocking_drain": {"serial": ser, "pipelined": pipe,
+                                    "wait_reduction": reduction}}
+            rows.append([algo, "drain-wait",
+                         f"{ser['drain_share']:.1%} of wall",
+                         f"{pipe['drain_share']:.1%} of wall",
+                         f"-{reduction:.0%}", parity])
+            for scen, ckd in (("plain", None), ("ckpt", td)):
+                t_off = _time_variant(algo, cfg, ds, rounds, cache, False,
+                                      ckpt_dir=ckd)
+                t_on = _time_variant(algo, cfg, ds, rounds, cache, True,
+                                     ckpt_dir=ckd)
+                r[scen] = {"serial_rounds_per_sec": rounds / t_off,
+                           "pipelined_rounds_per_sec": rounds / t_on,
+                           "speedup": t_off / t_on}
+                rows.append([algo, scen,
+                             f"{rounds / t_off:.1f} r/s",
+                             f"{rounds / t_on:.1f} r/s",
+                             f"{t_off / t_on:.2f}x", parity])
+            results[algo] = r
+    print(common.table(["algo", "measure", "serialized", "pipelined",
+                        "delta", "parity"], rows))
+    payload = {"n_nodes": N_NODES, "rounds": rounds,
+               "eval_every": EVAL_EVERY, "local_steps": LOCAL_STEPS,
+               "batch_size": BATCH, "repeats": REPEATS,
+               "host_cores": os.cpu_count(),
+               "results": results,
+               "min_drain_wait_reduction": min(
+                   r["blocking_drain"]["wait_reduction"]
+                   for r in results.values()),
+               "all_parity": all(r["parity"] for r in results.values())}
+    out = common.write_bench("pipeline", payload)
+    print(f"wrote {out} (host-blocking drain wait down >= "
+          f"{payload['min_drain_wait_reduction']:.0%}; wall-clock on a "
+          f"{payload['host_cores']}-core host is a parity gate — see "
+          "module docstring)")
+    return payload
+
+
+def smoke() -> dict:
+    """Pipeline exercise for the dry-run matrix: pipeline=True parity on
+    a tiny FACADE run."""
+    cfg, ds = common.micro_config(4)
+    kw = dict(rounds=4, k=2, degree=2, local_steps=2, batch_size=4,
+              lr=0.05, eval_every=2, seed=0)
+    off = run_experiment("facade", cfg, ds, pipeline=False, **kw)
+    on = run_experiment("facade", cfg, ds, pipeline=True, **kw)
+    ok = (off.acc_per_cluster == on.acc_per_cluster
+          and off.comm.bytes == on.comm.bytes
+          and np.isfinite(on.comm.bytes[-1]))
+    return {"status": "ok" if ok else "fail",
+            "final_acc": [float(a) for a in on.final_acc],
+            "total_bytes": float(on.comm.bytes[-1])}
+
+
+def smoke_ckpt() -> dict:
+    """Pipeline + checkpoint exercise for the dry-run matrix: a
+    checkpointed pipelined run must match an uncheckpointed serialized
+    one and leave a resumable archive behind."""
+    cfg, ds = common.micro_config(4)
+    kw = dict(rounds=4, k=2, degree=2, local_steps=2, batch_size=4,
+              lr=0.05, eval_every=2, seed=0)
+    ref = run_experiment("facade", cfg, ds, **kw)
+    with tempfile.TemporaryDirectory(prefix="repro-pipe-ckpt-") as td:
+        ck = os.path.join(td, "run.npz")
+        got = run_experiment("facade", cfg, ds, pipeline=True, ckpt=ck,
+                             **kw)
+        resumed = run_experiment("facade", cfg, ds, pipeline=True,
+                                 ckpt=ck, **kw)   # finished: no-op replay
+        ck_exists = os.path.exists(ck)
+    ok = (ref.acc_per_cluster == got.acc_per_cluster
+          and ref.comm.bytes == got.comm.bytes
+          and got.acc_per_cluster == resumed.acc_per_cluster
+          and ck_exists)
+    return {"status": "ok" if ok else "fail", "ckpt_written": ck_exists}
+
+
+if __name__ == "__main__":
+    run()

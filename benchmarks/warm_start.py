@@ -1,0 +1,143 @@
+"""Warm start: the persistent XLA compile cache across PROCESSES.
+
+Every sweep process historically started cold — the in-process
+``EngineCache`` shares compiled programs across runs, but the XLA
+executables behind them died with the process, so a rerun grid, a CI
+shard or a preemption-resumed sweep paid the full compile bill again.
+``EngineCache(persist_dir=...)`` wires ``jax_compilation_cache_dir``
+through, so serialized executables survive on disk.
+
+This benchmark launches the SAME tiny run twice in two fresh child
+processes sharing one persist dir: the first (cold) populates the disk
+cache while compiling; the second (warm) deserializes executables and
+reaches its first segment dispatch measurably faster. Each child reports
+``first_dispatch_s`` (cache-entry build + first ``run_segment``, i.e.
+time to first useful device work) and its tracer ``compile`` span total.
+
+Writes ``results/bench/BENCH_warmstart.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import tempfile
+import time
+
+from . import common
+
+N_NODES = 8
+ROUNDS = 8
+EVAL_EVERY = 8
+
+
+def _child_payload(persist_dir: str) -> dict:
+    """One fresh-process measurement: build an EngineCache over
+    ``persist_dir`` and time cache-entry build + the first segment."""
+    import jax  # noqa: F401  (imported before timing starts, like a real run)
+
+    from repro.core.cache import EngineCache
+    from repro.core.runner import run_experiment
+    from repro.obs import Obs
+
+    cfg, ds = common.micro_config(N_NODES)
+    cache = EngineCache(persist_dir=persist_dir)
+    obs = Obs(config=None)           # spans only: no device-side frames
+    t0 = time.perf_counter()
+    run_experiment("facade", cfg, ds, rounds=ROUNDS, k=2, degree=2,
+                   local_steps=1, batch_size=2, lr=0.05,
+                   eval_every=EVAL_EVERY, seed=0, cache=cache, obs=obs)
+    first = time.perf_counter() - t0
+    roll = obs.tracer.rollup()["spans"]
+    return {"first_dispatch_s": first,
+            "compile_s": roll.get("compile", {}).get("total_s", 0.0),
+            "eval_s": roll.get("eval", {}).get("total_s", 0.0)}
+
+
+def _spawn(persist_dir: str) -> dict:
+    """Run ``_child_payload`` in a FRESH interpreter (the whole point:
+    in-process jit caches don't survive it; only the persist dir does)."""
+    env = dict(os.environ)
+    src = str(pathlib.Path(__file__).resolve().parent.parent / "src")
+    env["PYTHONPATH"] = src + (os.pathsep + env["PYTHONPATH"]
+                               if env.get("PYTHONPATH") else "")
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.warm_start", "--child",
+         persist_dir],
+        cwd=str(pathlib.Path(__file__).resolve().parent.parent),
+        env=env, capture_output=True, text=True, check=False)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"warm_start child failed:\n{proc.stdout}\n{proc.stderr}")
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def run(quick: bool = True) -> dict:
+    with tempfile.TemporaryDirectory(prefix="repro-xla-cache-") as td:
+        cold = _spawn(td)
+        n_files = len(list(pathlib.Path(td).iterdir()))
+        warm = _spawn(td)
+    speedup = cold["first_dispatch_s"] / max(warm["first_dispatch_s"], 1e-9)
+    rows = [["cold", f"{cold['first_dispatch_s']:.2f}",
+             f"{cold['compile_s']:.2f}"],
+            ["warm", f"{warm['first_dispatch_s']:.2f}",
+             f"{warm['compile_s']:.2f}"]]
+    print(common.table(["process", "first_dispatch_s", "compile_s"], rows))
+    payload = {"n_nodes": N_NODES, "rounds": ROUNDS,
+               "cold": cold, "warm": warm,
+               "speedup_first_dispatch": speedup,
+               "persisted_files": n_files,
+               "warm_faster": warm["first_dispatch_s"]
+               < cold["first_dispatch_s"]}
+    out = common.write_bench("warmstart", payload)
+    print(f"wrote {out} (second process reaches first dispatch "
+          f"{speedup:.2f}x faster)")
+    return payload
+
+
+def smoke() -> dict:
+    """In-process persist-dir exercise for the dry-run matrix: a run over
+    ``EngineCache(persist_dir=...)`` must populate the disk cache and stay
+    bit-for-bit a plain run."""
+    import numpy as np
+
+    from repro.core.cache import EngineCache, detach_persist_dir
+    from repro.core.runner import run_experiment
+
+    cfg, ds = common.micro_config(4)
+    kw = dict(rounds=4, k=2, degree=2, local_steps=1, batch_size=2,
+              lr=0.05, eval_every=2, seed=0)
+    ref = run_experiment("facade", cfg, ds, **kw)
+    try:
+        with tempfile.TemporaryDirectory(prefix="repro-xla-smoke-") as td:
+            cache = EngineCache(persist_dir=td)
+            got = run_experiment("facade", cfg, ds, cache=cache, **kw)
+            n_files = len(list(pathlib.Path(td).iterdir()))
+    finally:
+        # the persist dir is process-global jax config; detach before the
+        # tempdir disappears so later compiles don't write into the void
+        detach_persist_dir()
+    ok = (ref.acc_per_cluster == got.acc_per_cluster
+          and ref.comm.bytes == got.comm.bytes and n_files > 0
+          and np.isfinite(got.comm.bytes[-1]))
+    return {"status": "ok" if ok else "fail", "persisted_files": n_files,
+            "cache_stats": cache.stats()}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--child", metavar="PERSIST_DIR", default=None)
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args(argv)
+    if args.child is not None:
+        print(json.dumps(_child_payload(args.child)))
+        return 0
+    run(quick=not args.full)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

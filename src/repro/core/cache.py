@@ -43,11 +43,31 @@ Donation caveat: segment programs donate their input :class:`EngineCarry`
 buffers. Reusing a cached engine across runs is safe precisely because
 each run builds a FRESH carry from its own seed; never feed a consumed
 carry back into ``run_segment``.
+
+Always-warm extensions (ROADMAP Open Item 5a):
+
+* ``EngineCache(persist_dir=...)`` points JAX's persistent compilation
+  cache at a directory, so the serialized XLA executables behind every
+  entry survive the PROCESS — a second sweep (or a CI shard, or a
+  resumed grid) reaches its first dispatch without recompiling
+  (``benchmarks/warm_start.py`` measures the cross-process win). The
+  in-process :class:`EngineCache` keys stay the source of truth; the
+  persistent layer only short-circuits XLA compilation underneath them.
+* ``EngineCache(max_entries=...)`` bounds the in-process entry count with
+  LRU eviction, so giant grids don't grow program memory without limit.
+  Entries pinned via :meth:`EngineCache.pin` (``run_experiment`` pins its
+  entry for the duration of the run) are never evicted — donation and
+  segment-program reuse stay safe mid-run; when everything live is
+  pinned the bound is allowed to overshoot rather than break a run.
+  Evictions are counted in :meth:`stats` and emitted as ``cache.evict``
+  tracer events next to the existing ``cache.hit``/``cache.miss``.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import hashlib
+import os
 import weakref
 from typing import Any
 
@@ -86,6 +106,55 @@ class EngineSpec:
     #                              it must fork the key. Host-side sink /
     #                              tracer / profiler settings (repro.obs.
     #                              Obs) deliberately never appear here.
+
+
+def attach_persist_dir(path) -> str:
+    """Point JAX's persistent compilation cache at ``path`` (created if
+    missing) and drop the persistence floors so the sweeps' many small
+    segment programs — each well under the default 1s-compile-time /
+    min-entry-size thresholds — are persisted too.
+
+    The JAX compilation-cache directory is PROCESS-GLOBAL state: the last
+    attach wins for every compile in the process, not just this cache's.
+    That is the behavior we want (one warm disk cache per sweep process)
+    but it means two live ``EngineCache(persist_dir=...)`` instances with
+    different directories cannot both be honored — the newer one is.
+    """
+    import jax
+
+    path = str(path)
+    os.makedirs(path, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", path)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+    try:
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    except Exception:   # knob absent on old jax: size floor stays default
+        pass
+    _reset_jax_cache()
+    return path
+
+
+def detach_persist_dir() -> None:
+    """Undo :func:`attach_persist_dir`: stop persisting compiles to disk.
+    Call this before a temporary persist dir is deleted — the attached
+    cache object is process-global and would otherwise keep writing into
+    the removed directory."""
+    import jax
+
+    jax.config.update("jax_compilation_cache_dir", None)
+    _reset_jax_cache()
+
+
+def _reset_jax_cache() -> None:
+    """Drop JAX's lazily-initialized persistent-cache singleton so the
+    next compile re-reads ``jax_compilation_cache_dir``. Without this,
+    attaching after the process's first compile is silently a no-op (the
+    singleton latched the old — usually absent — directory)."""
+    try:
+        from jax._src import compilation_cache
+        compilation_cache.reset_cache()
+    except Exception:   # private module moved: newer jax re-reads config
+        pass
 
 
 _FP_MEMO: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
@@ -162,26 +231,78 @@ class EngineCache:
     ``entry(spec)`` returns the cell's entry, building it on first use;
     ``evaluator(binding, dataset, batch)`` returns the (cfg, batch,
     data-fingerprint)-keyed evaluator. ``compile_count`` totals every
-    compiled program the cache owns — segment builds plus evaluator
-    builds — which is what sweep smokes assert stays flat after each
-    cell's first run.
+    compiled program the cache EVER built — segment builds plus evaluator
+    builds, monotone across LRU evictions — which is what sweep smokes
+    assert stays flat after each cell's first run.
+
+    ``persist_dir``: attach JAX's persistent compilation cache (see
+    :func:`attach_persist_dir`) so compiled executables survive the
+    process. ``max_entries``: LRU bound on live entries; ``None`` (the
+    default) keeps the historical unbounded behavior.
     """
 
-    def __init__(self):
-        self._entries: dict[EngineSpec, CacheEntry] = {}
+    def __init__(self, *, persist_dir=None, max_entries: int | None = None):
+        if max_entries is not None and max_entries < 1:
+            raise ValueError(
+                f"max_entries={max_entries} must be >= 1 (or None for "
+                "an unbounded cache): a run always needs its own entry")
+        self._entries: dict[EngineSpec, CacheEntry] = {}  # insertion = LRU
         self._evaluators: dict[tuple, Any] = {}
+        self._pins: dict[EngineSpec, int] = {}
         self.hits = 0            # entry() served from cache
         self.misses = 0          # entry() had to build
+        self.evictions = 0       # entries dropped by the LRU bound
         self.evaluator_builds = 0
+        self.max_entries = max_entries
+        self._evicted_compiles = 0   # keeps compile_count monotone
+        self.persist_dir = (attach_persist_dir(persist_dir)
+                            if persist_dir is not None else None)
 
-    def entry(self, spec: EngineSpec) -> CacheEntry:
+    def entry(self, spec: EngineSpec, tracer=None) -> CacheEntry:
         e = self._entries.get(spec)
         if e is None:
             self.misses += 1
             e = self._entries[spec] = CacheEntry(spec)
         else:
             self.hits += 1
+            self._entries[spec] = self._entries.pop(spec)  # -> MRU slot
+        self._evict(keep=spec, tracer=tracer)
         return e
+
+    def _evict(self, keep: EngineSpec, tracer=None):
+        if self.max_entries is None:
+            return
+        while len(self._entries) > self.max_entries:
+            victim = next(
+                (s for s in self._entries       # oldest-first = LRU order
+                 if s != keep and self._pins.get(s, 0) == 0), None)
+            if victim is None:
+                return   # every live entry is pinned by a running
+                #          experiment: overshoot rather than break one
+            dead = self._entries.pop(victim)
+            self._evicted_compiles += dead.compile_count
+            self.evictions += 1
+            if tracer is not None:
+                tracer.event("cache.evict", algo=victim.algo,
+                             entries=len(self._entries))
+
+    @contextlib.contextmanager
+    def pin(self, spec: EngineSpec):
+        """Hold ``spec``'s entry out of LRU eviction for the duration —
+        ``run_experiment`` wraps each run in this so the entry (and its
+        compiled segment programs) can't be dropped mid-run."""
+        self._pins[spec] = self._pins.get(spec, 0) + 1
+        try:
+            yield
+        finally:
+            n = self._pins[spec] - 1
+            if n:
+                self._pins[spec] = n
+            else:
+                del self._pins[spec]
+
+    def pinned(self, spec: EngineSpec) -> bool:
+        return self._pins.get(spec, 0) > 0
 
     def evaluator(self, binding, dataset, batch: int = 256):
         key = (binding.cfg, batch, data_fingerprint(dataset))
@@ -197,12 +318,15 @@ class EngineCache:
     @property
     def compile_count(self) -> int:
         return (sum(e.compile_count for e in self._entries.values())
-                + self.evaluator_builds)
+                + self._evicted_compiles + self.evaluator_builds)
 
     def stats(self) -> dict:
         return {"entries": len(self._entries), "hits": self.hits,
-                "misses": self.misses, "compiles": self.compile_count,
-                "evaluator_builds": self.evaluator_builds}
+                "misses": self.misses, "evictions": self.evictions,
+                "compiles": self.compile_count,
+                "evaluator_builds": self.evaluator_builds,
+                "max_entries": self.max_entries,
+                "persist_dir": self.persist_dir}
 
     def __len__(self) -> int:
         return len(self._entries)

@@ -195,18 +195,22 @@ class SegmentEngine:
 
         return jax.jit(segment, donate_argnums=(0,))
 
-    def run_segment(self, carry: EngineCarry, start: int, length: int,
-                    train_x, train_y, warmup: bool = False, tracer=None):
-        """Advance ``length`` rounds in one dispatch.
+    def dispatch_segment(self, carry: EngineCarry, start: int, length: int,
+                         train_x, train_y, warmup: bool = False,
+                         tracer=None):
+        """Enqueue ``length`` rounds in one async dispatch — no host sync.
 
-        Returns ``(new_carry, outs)`` where ``outs`` is a dict of host
-        numpy arrays with leading axis ``length`` — the segment's only
-        device->host transfer. ``tracer``: optional
-        :class:`repro.obs.Tracer` — wraps the call in ``compile`` (first
-        trace of this program) or ``dispatch`` spans and the bulk
-        ``device_get`` in a ``drain`` span. Dispatch is async, so the
-        drain span absorbs device compute + transfer — exactly the
-        serialization ROADMAP Open Item 5(b) wants to pipeline away.
+        Returns ``(new_carry, outs)`` where both are DEVICE values (the
+        stacked per-round outs still live on device); pair with
+        :meth:`drain` to pull ``outs`` to the host. This is the pipelined
+        driver's half-step: it dispatches segment ``t+1`` off the fresh
+        carry before draining segment ``t``'s scalars, so host-side
+        bookkeeping overlaps device compute. The input ``carry`` is
+        donated — consumed either way.
+
+        ``tracer`` wraps the call in a ``compile`` span (first trace of
+        this program in this process) or a ``dispatch`` span (async:
+        trace + enqueue only).
         """
         key = (length, warmup)
         fn = self._compiled.get(key)
@@ -220,8 +224,30 @@ class SegmentEngine:
             self.compile_count += 1
         with _sp(tracer, "compile" if fresh else "dispatch",
                  length=length, warmup=warmup):
-            carry, outs = fn(carry, jnp.asarray(start, jnp.int32),
-                             train_x, train_y)
-        with _sp(tracer, "drain", length=length):
-            outs = jax.device_get(outs)
-        return carry, outs
+            return fn(carry, jnp.asarray(start, jnp.int32),
+                      train_x, train_y)
+
+    def drain(self, outs, tracer=None, length: int | None = None):
+        """Pull a dispatched segment's stacked outs to the host (the
+        segment's only device->host transfer). In the serialized driver
+        the ``drain`` span absorbs device compute + transfer; in the
+        pipelined driver the next segment is already running, so the span
+        shrinks to the residual wait."""
+        with _sp(tracer, "drain",
+                 **({} if length is None else {"length": length})):
+            return jax.device_get(outs)
+
+    def run_segment(self, carry: EngineCarry, start: int, length: int,
+                    train_x, train_y, warmup: bool = False, tracer=None):
+        """Advance ``length`` rounds in one dispatch and drain the outs.
+
+        Returns ``(new_carry, outs)`` where ``outs`` is a dict of host
+        numpy arrays with leading axis ``length``. Dispatch is async, so
+        the drain span absorbs device compute + transfer — the
+        serialization the ``pipeline=True`` driver overlaps away via
+        :meth:`dispatch_segment` + :meth:`drain`.
+        """
+        carry, outs = self.dispatch_segment(carry, start, length, train_x,
+                                            train_y, warmup=warmup,
+                                            tracer=tracer)
+        return carry, self.drain(outs, tracer=tracer, length=length)

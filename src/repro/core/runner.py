@@ -176,16 +176,33 @@ def make_evaluator(binding: Binding, node_cluster, test_x, test_y,
     predictions per cluster for DP/EO (the legacy contract), plus the
     per-NODE accuracy vector ``[n]`` the per-tier fairness tables
     (adaptive topology, :mod:`repro.topo`) consume.
+
+    Empty clusters — the imbalanced-cluster grids can assign a cluster
+    zero nodes — are SKIPPED, not crashed on: they contribute no entry to
+    ``acc_per_cluster``/``preds_c``/``labels_c`` (and therefore drop out
+    of fair-accuracy and DP/EO, which compare the clusters that exist).
+    ``evaluate.cluster_ids`` records which cluster each returned entry
+    belongs to; with no empty clusters it is exactly ``range(k)``.
+
+    ``evaluate.begin(models)`` / ``evaluate.finish(pending)`` split the
+    call at the dispatch boundary: ``begin`` enqueues every per-cluster
+    prediction asynchronously (no host sync), ``finish`` drains and
+    reduces. The pipelined engine driver uses the split to overlap eval
+    compute/drain with the next segment's device compute;
+    ``evaluate(models)`` == ``finish(begin(models))``.
     """
     cfg = binding.cfg
     node_cluster = np.asarray(node_cluster)
     clusters = []
     for c in range(len(test_x)):
+        idx = np.where(node_cluster == c)[0]
+        if idx.size == 0:
+            continue        # empty cluster: nothing to evaluate
         x = np.asarray(test_x[c])
         # cap the batch at the test-set size: padding waste stays < one row
         xb, mask = pipeline.padded_eval_batches(
             x, min(batch, max(1, x.shape[0])))
-        clusters.append((np.where(node_cluster == c)[0], jnp.asarray(xb),
+        clusters.append((idx, jnp.asarray(xb),
                          mask.reshape(-1) > 0, np.asarray(test_y[c])))
 
     @jax.jit
@@ -197,12 +214,15 @@ def make_evaluator(binding: Binding, node_cluster, test_x, test_y,
 
         return jax.lax.map(per_batch, xb)            # [nb, m, B]
 
-    def evaluate(models):
+    def begin(models):
+        return [predict(jax.tree.map(lambda l: l[idx], models), xb)
+                for idx, xb, _, _ in clusters]
+
+    def finish(pending):
         accs, preds_c, labels_c = [], [], []
         node_acc = np.zeros(node_cluster.shape[0], np.float64)
-        for idx, xb, valid, y in clusters:
-            models_c = jax.tree.map(lambda l: l[idx], models)
-            p = np.asarray(predict(models_c, xb))    # [nb, m, B]
+        for (idx, _, valid, y), pred in zip(clusters, pending):
+            p = np.asarray(pred)                     # [nb, m, B]
             p = np.moveaxis(p, 1, 0).reshape(len(idx), -1)[:, valid]
             eq = p == y[None, :]
             accs.append(float(eq.mean()))
@@ -211,6 +231,13 @@ def make_evaluator(binding: Binding, node_cluster, test_x, test_y,
             labels_c.append(y)
         return accs, preds_c, labels_c, node_acc
 
+    def evaluate(models):
+        return finish(begin(models))
+
+    evaluate.begin = begin
+    evaluate.finish = finish
+    evaluate.cluster_ids = tuple(int(node_cluster[idx[0]])
+                                 for idx, _, _, _ in clusters)
     return evaluate
 
 
@@ -235,12 +262,25 @@ class _History:
         self._algo = algo
         self._n_classes = n_classes
 
+    def eval_begin(self, state):
+        """Enqueue the eval's per-cluster predictions asynchronously (no
+        host sync) — the pipelined driver calls this BEFORE dispatching
+        the next segment (which donates the state buffers), then settles
+        with :meth:`eval_finish` while that segment computes."""
+        return self._evaluator.begin(self._models_of(state))
+
     def eval_round(self, state, rnd: int, round_bytes: float,
                    round_s: float) -> bool:
         """Evaluate at round ``rnd`` (1-based), record, and report whether
         ``target_acc`` is reached (the driver then stops)."""
-        models = self._models_of(state)
-        accs, preds_c, labels_c, node_acc = self._evaluator(models)
+        return self.eval_finish(self.eval_begin(state), rnd, round_bytes,
+                                round_s)
+
+    def eval_finish(self, pending, rnd: int, round_bytes: float,
+                    round_s: float) -> bool:
+        accs, preds_c, labels_c, node_acc = self._evaluator.finish(pending)
+        cids = getattr(self._evaluator, "cluster_ids",
+                       tuple(range(len(accs))))
         self.accs = accs
         self.node_acc = node_acc
         self.acc_hist.append((rnd, accs))
@@ -248,9 +288,12 @@ class _History:
         self.fair_hist.append((rnd, fa))
         self.dp = demographic_parity(preds_c, self._n_classes)
         self.eo = equalized_odds(preds_c, labels_c, self._n_classes)
+        # node-weighted mean over the clusters that exist; with no empty
+        # clusters ``cids == range(len(accs))`` and this is bit-for-bit
+        # the historical enumerate() formula
         mean_acc = float(np.mean(
             [a * (self._weights == c).sum()
-             for c, a in enumerate(accs)]) * len(accs) / self._n)
+             for c, a in zip(cids, accs)]) * len(accs) / self._n)
         self.comm.record(rnd, round_bytes, mean_acc, round_s=round_s)
         if self._verbose:
             print(f"  [{self._algo}] round {rnd}: acc={accs} fair={fa:.3f}")
@@ -272,6 +315,7 @@ def run_experiment(algo: str, cfg, dataset, *, rounds: int, k: int | None = None
                    net: "netsim.NetworkConfig | None" = None,
                    topo: "topo_mod.TopoConfig | None" = None,
                    engine: bool = True,
+                   pipeline: bool = False,
                    cache: EngineCache | None = None,
                    eval_batch: int = 256,
                    obs: "obs_mod.Obs | None" = None,
@@ -294,6 +338,15 @@ def run_experiment(algo: str, cfg, dataset, *, rounds: int, k: int | None = None
     ``engine``: ``True`` compiles whole eval-to-eval spans into one XLA
     dispatch (scan-fused segment engine, the fast path); ``False`` runs the
     legacy per-round loop. Same seed => bit-identical trajectories.
+
+    ``pipeline`` (engine driver only): double-buffer the segment loop —
+    segment ``t+1`` is dispatched (and ``t``'s eval enqueued) BEFORE
+    segment ``t``'s stacked scalars are drained, so host-side bookkeeping
+    (``device_get``, ``CommLog.record_bulk``, eval reduction, checkpoint
+    writes) overlaps device compute of ``t+1``. Bit-for-bit identical to
+    ``pipeline=False``: ``t+1`` consumes exactly the fresh carry ``t``
+    produced and the host processes segments in order; a ``target_acc``
+    hit discards at most one speculatively dispatched segment.
 
     ``cache``: optional :class:`repro.core.cache.EngineCache` shared across
     calls — a sweep of seeds over one config then pays the XLA compiles
@@ -324,6 +377,16 @@ def run_experiment(algo: str, cfg, dataset, *, rounds: int, k: int | None = None
         raise ValueError(
             "ckpt= needs the segment engine (engine=True): the legacy "
             "per-round loop has no segment boundaries to snapshot at")
+    if pipeline and not engine:
+        raise ValueError(
+            "pipeline=True needs the segment engine (engine=True): the "
+            "legacy per-round loop has no segment dispatch to overlap")
+    if eval_every <= 0:
+        raise ValueError(
+            f"eval_every={eval_every} must be a positive round count: the "
+            "drivers schedule an eval every eval_every-th round, so 0 "
+            "divides by zero and negative values silently degrade to a "
+            "single final-round eval")
     if target_acc is not None and eval_every > rounds:
         raise ValueError(
             f"target_acc={target_acc} can never trigger an early exit with "
@@ -359,7 +422,7 @@ def run_experiment(algo: str, cfg, dataset, *, rounds: int, k: int | None = None
         obs.begin_run(algo=algo, seed=seed, rounds=rounds, engine=engine)
     misses0 = cache.misses
     with _sp(tracer, "cache.entry", algo=algo):
-        entry = cache.entry(spec)
+        entry = cache.entry(spec, tracer=tracer)
     if tracer is not None:
         tracer.event("cache.miss" if cache.misses > misses0
                      else "cache.hit", algo=algo, seed=seed)
@@ -380,12 +443,15 @@ def run_experiment(algo: str, cfg, dataset, *, rounds: int, k: int | None = None
             "eval_every": eval_every, "warmup_rounds": warmup_rounds,
             "target": repr(target_acc)})
     prof = obs.profile() if obs is not None else contextlib.nullcontext()
-    with prof, _sp(tracer, "run", algo=algo, seed=seed, engine=engine):
+    # pin the entry while the run is live: an LRU-bounded cache must never
+    # evict the engine whose donated carry/segment programs are in flight
+    with prof, cache.pin(spec), \
+            _sp(tracer, "run", algo=algo, seed=seed, engine=engine):
         if engine:
             _drive_engine(entry.engine, setup, hist, k_data, train_x,
                           train_y, rounds=rounds, eval_every=eval_every,
                           warmup_rounds=warmup_rounds, obs=obs,
-                          ckpt=ckpt, ckpt_fp=ckpt_fp)
+                          ckpt=ckpt, ckpt_fp=ckpt_fp, pipeline=pipeline)
         else:
             _drive_legacy(setup, hist, k_data, train_x, train_y,
                           rounds=rounds, eval_every=eval_every,
@@ -396,7 +462,8 @@ def run_experiment(algo: str, cfg, dataset, *, rounds: int, k: int | None = None
         obs.end_run(obs_mod.RunManifest.build(
             kind="run", name=f"{algo}-seed{seed}", spec=spec,
             settings={"rounds": rounds, "eval_every": eval_every,
-                      "engine": engine, "seed": seed, "net": repr(net),
+                      "engine": engine, "pipeline": pipeline, "seed": seed,
+                      "net": repr(net),
                       "topo": repr(topo), "obs": repr(obs.config)},
             timing=obs.tracer.rollup(), cache=cache.stats()))
     return hist.result(algo)
@@ -456,29 +523,85 @@ def _hist_restore(hist: _History, snap: dict):
                      else np.asarray(snap["node_acc"]))
 
 
+def _frame_path(ckpt: str, index: int) -> str:
+    return f"{ckpt}.frames-{index}.npz"
+
+
 def _ckpt_save(path: str, fp: str, carry: EngineCarry, hist: _History,
-               frames, next_segment: int, finished: bool):
+               new_frames, n_frame_files: int, next_segment: int,
+               finished: bool) -> int:
     """Snapshot the whole resumable run state at a segment boundary:
     the drained :class:`EngineCarry` (algorithm state + data PRNG + netsim
     channel + async gossip + topo EWMAs + crash chain), the eval/comm
-    histories, and every obs frame drained so far (replayed into the new
-    ``Obs`` on resume). Atomic via :func:`repro.checkpoint.save`."""
-    payload = {
-        "carry": jax.device_get(carry),
-        "hist": _hist_snapshot(hist),
-        "frames": [{"rounds": np.asarray(r, np.int64),
-                    "frame": tuple(None if l is None else np.asarray(l)
-                                   for l in f)}
-                   for r, f in frames],
-    }
-    checkpoint.save(path, payload, meta={
-        "fingerprint": fp, "next_segment": int(next_segment),
-        "finished": bool(finished)})
+    histories, and — when obs frames are enabled — THIS segment's drained
+    frames (``new_frames = (rounds, MetricsFrame)`` or ``None``).
+
+    Frames are append-only sidecar files (``<path>.frames-<i>.npz``), one
+    per frame-bearing segment, so the per-segment write cost stays ~flat:
+    the main archive rewrites only the carry + the (scalar-sized)
+    histories, never the accumulated frame payloads — checkpoint I/O is
+    O(segments), not the O(segments^2) a rewrite-everything layout costs
+    on long obs-enabled runs. The sidecar is written BEFORE the main
+    archive, whose meta records how many sidecars are valid
+    (``frame_files``); a crash in between leaves an orphan the next run
+    deterministically overwrites. Each write is atomic via
+    :func:`repro.checkpoint.save`. Returns the updated sidecar count."""
+    if new_frames is not None:
+        rnds, fr = new_frames
+        checkpoint.save(
+            _frame_path(path, n_frame_files),
+            {"rounds": np.asarray(rnds, np.int64),
+             "frame": tuple(None if l is None else np.asarray(l)
+                            for l in fr)},
+            meta={"fingerprint": fp, "index": int(n_frame_files)})
+        n_frame_files += 1
+    checkpoint.save(path, {"carry": jax.device_get(carry),
+                           "hist": _hist_snapshot(hist)},
+                    meta={"fingerprint": fp,
+                          "next_segment": int(next_segment),
+                          "finished": bool(finished),
+                          "frame_files": int(n_frame_files)})
+    return n_frame_files
+
+
+def _ckpt_resume(ckpt, ckpt_fp, carry, hist, obs, tracer):
+    """Fast-forward a checkpointed run: rebuild the carry leaf-for-leaf on
+    the freshly minted template (the checkpoint stores plain tuples/dicts,
+    the template restores the NamedTuple treedef and None placement the
+    engine donates), rehydrate the histories, and replay every frame
+    sidecar into the new ``Obs``. Returns ``(carry, start_idx,
+    n_frame_files, finished)``."""
+    payload, meta = checkpoint.load(ckpt)
+    if meta.get("fingerprint") != ckpt_fp:
+        raise ValueError(
+            f"checkpoint {ckpt!r} was written by a different run "
+            "configuration (fingerprint mismatch) — refusing to "
+            "resume from it; delete the file or pick a fresh path")
+    carry = jax.tree.unflatten(
+        jax.tree.structure(carry),
+        [jnp.asarray(l) for l in jax.tree.leaves(payload["carry"])])
+    _hist_restore(hist, payload["hist"])
+    n_frame_files = int(meta.get("frame_files", 0))
+    for j in range(n_frame_files):
+        rec, fmeta = checkpoint.load(_frame_path(ckpt, j))
+        if fmeta.get("fingerprint") != ckpt_fp:
+            raise ValueError(
+                f"frame sidecar {_frame_path(ckpt, j)!r} does not match "
+                f"checkpoint {ckpt!r} (fingerprint mismatch) — refusing "
+                "to resume; delete the checkpoint files to restart")
+        if obs is not None:
+            obs.record_frames(np.asarray(rec["rounds"]),
+                              obs_mod.MetricsFrame(*rec["frame"]))
+    if tracer is not None:
+        tracer.event("ckpt.resume", segment=int(meta["next_segment"]),
+                     finished=bool(meta.get("finished")))
+    return (carry, int(meta["next_segment"]), n_frame_files,
+            bool(meta.get("finished")))
 
 
 def _drive_engine(eng, setup: AlgoSetup, hist: _History, k_data,
                   train_x, train_y, *, rounds, eval_every, warmup_rounds,
-                  obs=None, ckpt=None, ckpt_fp=None):
+                  obs=None, ckpt=None, ckpt_fp=None, pipeline=False):
     """Segment-engine driver: one dispatch + one host transfer per span.
     ``eng`` comes from the run's :class:`EngineCache` entry, so repeated
     runs of one config reuse its compiled segment programs. ``obs``: the
@@ -494,38 +617,25 @@ def _drive_engine(eng, setup: AlgoSetup, hist: _History, k_data,
     existing checkpoint with a matching fingerprint fast-forwards the run
     to its ``next_segment``. Segments are deterministic functions of the
     carry, so the resumed trajectory is bit-for-bit the uninterrupted one.
+
+    ``pipeline``: double-buffered variant — see :func:`_drive_pipelined`.
+    ``False`` keeps this serialized loop bit-for-bit.
     """
     tracer = obs.tracer if obs is not None else None
     plan = segment_plan(rounds, eval_every, warmup_rounds)
     carry = eng.init_carry(setup.state, k_data)
     start_idx = 0
-    frames_seen = []    # [(rounds [m], stacked MetricsFrame)] for re-save
+    n_frames = 0        # frame sidecar files already on disk
     if ckpt is not None and os.path.exists(ckpt):
-        payload, meta = checkpoint.load(ckpt)
-        if meta.get("fingerprint") != ckpt_fp:
-            raise ValueError(
-                f"checkpoint {ckpt!r} was written by a different run "
-                "configuration (fingerprint mismatch) — refusing to "
-                "resume from it; delete the file or pick a fresh path")
-        # rebuild the carry leaf-for-leaf on the freshly minted template:
-        # the checkpoint stores plain tuples/dicts, the template restores
-        # the NamedTuple treedef (and None placement) the engine donates
-        carry = jax.tree.unflatten(
-            jax.tree.structure(carry),
-            [jnp.asarray(l) for l in jax.tree.leaves(payload["carry"])])
-        _hist_restore(hist, payload["hist"])
-        for rec in payload["frames"]:
-            rnds = np.asarray(rec["rounds"])
-            fr = obs_mod.MetricsFrame(*rec["frame"])
-            frames_seen.append((rnds, fr))
-            if obs is not None:
-                obs.record_frames(rnds, fr)
-        if tracer is not None:
-            tracer.event("ckpt.resume", segment=int(meta["next_segment"]),
-                         finished=bool(meta.get("finished")))
-        if meta.get("finished"):
+        carry, start_idx, n_frames, finished = _ckpt_resume(
+            ckpt, ckpt_fp, carry, hist, obs, tracer)
+        if finished:
             return
-        start_idx = int(meta["next_segment"])
+    if pipeline:
+        _drive_pipelined(eng, setup, hist, carry, plan, start_idx,
+                         n_frames, train_x, train_y, rounds=rounds,
+                         obs=obs, ckpt=ckpt, ckpt_fp=ckpt_fp)
+        return
     for idx in range(start_idx, len(plan)):
         seg = plan[idx]
         carry, outs = eng.run_segment(carry, seg.start, seg.length,
@@ -557,12 +667,93 @@ def _drive_engine(eng, setup: AlgoSetup, hist: _History, k_data,
                 hist.cluster_hist.append(
                     (int(rnds[i]), np.asarray(outs["cluster_id"][i])))
         if ckpt is not None:
-            if "frame" in outs:
-                frames_seen.append((rnds, outs["frame"]))
+            new_fr = (rnds, outs["frame"]) if "frame" in outs else None
             finished = hit or idx + 1 == len(plan)
             with _sp(tracer, "ckpt.save", segment=idx, finished=finished):
-                _ckpt_save(ckpt, ckpt_fp, carry, hist, frames_seen,
-                           idx + 1, finished)
+                n_frames = _ckpt_save(ckpt, ckpt_fp, carry, hist, new_fr,
+                                      n_frames, idx + 1, finished)
+        if hit:
+            break
+
+
+def _drive_pipelined(eng, setup: AlgoSetup, hist: _History, carry, plan,
+                     start_idx, n_frames, train_x, train_y, *, rounds,
+                     obs=None, ckpt=None, ckpt_fp=None):
+    """Double-buffered segment loop: while the host drains and processes
+    segment ``t``, the device already computes segment ``t+1``.
+
+    Order per iteration — the ordering is what makes donation safe:
+
+    1. enqueue segment ``t``'s eval (async ``predict`` dispatches reading
+       ``carry.state``) and, under ``ckpt``, an async device-side COPY of
+       the carry — both capture the buffers BEFORE they are donated;
+    2. dispatch segment ``t+1`` off the fresh carry (donates it);
+    3. drain segment ``t``'s stacked scalars and do all host bookkeeping
+       (``record_bulk``, eval reduction, cluster history, checkpoint
+       write) — now overlapping ``t+1``'s device compute.
+
+    Host-side processing happens strictly in segment order with the same
+    values as the serialized loop, so results are bit-for-bit identical.
+    A ``target_acc`` hit abandons the one speculatively dispatched
+    segment (its carry was consumed, its outs are never drained)."""
+    tracer = obs.tracer if obs is not None else None
+    if start_idx >= len(plan):
+        return
+
+    def dispatch(i, c):
+        s = plan[i]
+        return eng.dispatch_segment(c, s.start, s.length, train_x,
+                                    train_y, warmup=s.warmup,
+                                    tracer=tracer)
+
+    next_carry, pending = dispatch(start_idx, carry)
+    for idx in range(start_idx, len(plan)):
+        seg = plan[idx]
+        carry = next_carry
+        ev = None
+        if seg.eval_at_end:
+            state = carry.state
+            if seg.start + seg.length == rounds:
+                state = setup.finalize(state)
+                carry = carry._replace(state=state)
+            ev = hist.eval_begin(state)
+        snap = None
+        if idx + 1 < len(plan):
+            if ckpt is not None:
+                # async device copy: the checkpoint needs this carry's
+                # values AFTER the next dispatch has donated its buffers
+                snap = jax.tree.map(jnp.copy, carry)
+            next_carry, pending_next = dispatch(idx + 1, carry)
+        outs = eng.drain(pending, tracer=tracer, length=seg.length)
+        if idx + 1 < len(plan):
+            pending = pending_next
+        rnds = np.arange(seg.start + 1, seg.start + seg.length + 1)
+        if obs is not None and "frame" in outs:
+            obs.record_frames(rnds, outs["frame"])
+        hit = False
+        if seg.eval_at_end:
+            hist.comm.record_bulk(rnds[:-1], outs["round_bytes"][:-1],
+                                  outs["round_s"][:-1])
+            with _sp(tracer, "eval", round=int(rnds[-1])):
+                hit = hist.eval_finish(ev, int(rnds[-1]),
+                                       float(outs["round_bytes"][-1]),
+                                       float(outs["round_s"][-1]))
+        else:
+            hist.comm.record_bulk(rnds, outs["round_bytes"],
+                                  outs["round_s"])
+        if setup.track_cluster:
+            upto = len(rnds) - 1 if hit else len(rnds)
+            for i in range(upto):
+                hist.cluster_hist.append(
+                    (int(rnds[i]), np.asarray(outs["cluster_id"][i])))
+        if ckpt is not None:
+            new_fr = (rnds, outs["frame"]) if "frame" in outs else None
+            finished = hit or idx + 1 == len(plan)
+            with _sp(tracer, "ckpt.save", segment=idx, finished=finished):
+                n_frames = _ckpt_save(ckpt, ckpt_fp,
+                                      snap if snap is not None else carry,
+                                      hist, new_fr, n_frames, idx + 1,
+                                      finished)
         if hit:
             break
 

@@ -19,7 +19,16 @@ Timing semantics at the dispatch boundary: JAX dispatch is
 asynchronous, so a ``dispatch`` span measures trace+enqueue time while
 the following ``drain`` span (which blocks on ``device_get``) absorbs
 device compute + transfer. A ``compile`` span wraps the first call of a
-segment program, where XLA compilation dominates.
+segment program, where XLA compilation dominates. Under
+``run_experiment(pipeline=True)`` segment ``t+1`` is dispatched before
+``t`` is drained, so the device is already working while the host
+blocks: ``drain`` shrinks to the RESIDUAL wait (often ~0 once the
+pipeline is full) and the sum of ``drain`` spans no longer approximates
+device time — compare wall-clock across the ``run`` span instead. A
+``compile`` span can also be near-instant when the executable was
+deserialized from a persistent cache dir
+(``EngineCache(persist_dir=...)``): the span still marks the first
+trace, but XLA loads instead of compiling.
 """
 from __future__ import annotations
 

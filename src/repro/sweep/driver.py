@@ -132,11 +132,19 @@ def _cell_fingerprint(cell: SweepCell, net, seeds, targets) -> str:
 def run_sweep(cells: Sequence[SweepCell], seeds: Sequence[int], *,
               cache: EngineCache | None = None, targets: Sequence[float] = (),
               json_path=None, obs=None, ckpt_dir=None,
+              persist_dir=None, max_entries: int | None = None,
               verbose: bool = False) -> SweepResult:
     """Run every cell over every seed, reusing compiled programs.
 
     ``cache``: share one :class:`EngineCache` across calls to keep programs
     warm between sweeps (``None`` builds a fresh one for this sweep).
+    ``persist_dir``/``max_entries``: forwarded to that fresh
+    :class:`EngineCache` — ``persist_dir`` points JAX's persistent
+    compilation cache at a directory so the sweep's compiled executables
+    survive the process (a rerun, a CI shard or a resumed grid starts
+    warm), ``max_entries`` LRU-bounds the in-process entry count for
+    giant grids. Mutually exclusive with passing ``cache``, which carries
+    its own settings.
     ``targets``: accuracies for the per-cell bytes/seconds-to-target table.
     ``json_path``: if set, the aggregated sweep is written there as JSON,
     with a :class:`repro.obs.RunManifest` next to it
@@ -154,7 +162,14 @@ def run_sweep(cells: Sequence[SweepCell], seeds: Sequence[int], *,
     ``sweep.cell_failed`` event) and the grid CONTINUES; ``RuntimeError``
     is raised only when every cell failed.
     """
-    cache = cache if cache is not None else EngineCache()
+    if cache is not None and (persist_dir is not None
+                              or max_entries is not None):
+        raise ValueError(
+            "pass persist_dir/max_entries OR a prebuilt cache, not both: "
+            "an existing EngineCache already carries its own settings "
+            "(build it with EngineCache(persist_dir=..., max_entries=...))")
+    cache = cache if cache is not None else EngineCache(
+        persist_dir=persist_dir, max_entries=max_entries)
     tracer = obs.tracer if obs is not None else None
     seeds = tuple(int(s) for s in seeds)
     names = [c.name for c in cells]
