@@ -88,6 +88,23 @@ def engine_cache(max_entries: int | None = None):
                        or None, max_entries=max_entries)
 
 
+def fmt_to_target(v, fmt: str = "{:.1f} s"):
+    """Render a ``CommLog`` bytes/seconds-to-target value for a table.
+    ``None`` is the log's never-reached sentinel (see
+    :mod:`repro.comm.accounting`) — formatted as ``"not reached"``
+    instead of crashing an f-string's float format."""
+    return "not reached" if v is None else fmt.format(v)
+
+
+def to_target_ratio(base, new):
+    """Speedup ``base / new`` for a pair of to-target values, propagating
+    the never-reached sentinel: ``None`` when either side never crossed
+    the target (a run that never got there has no finite speedup)."""
+    if base is None or new is None or new == 0:
+        return None
+    return base / new
+
+
 def table(headers, rows) -> str:
     w = [max(len(str(h)), *(len(str(r[i])) for r in rows)) if rows
          else len(str(h)) for i, h in enumerate(headers)]

@@ -156,6 +156,21 @@ def run(quick: bool = True) -> dict:
         print(f"persist smoke: {warm_rec['status']} "
               f"({warm_rec['persisted_files']} files persisted)")
 
+    # sharded-engine smoke: 8-node FACADE on a forced 8-device node mesh
+    # (own subprocess: the device-count flag must precede jax init) —
+    # bytes bit-parity + tolerance-pinned accuracy vs the unsharded run
+    try:
+        from . import scale_curve
+        shard_rec = scale_curve.smoke()
+    except Exception as e:
+        shard_rec = {"status": "fail", "error": repr(e)}
+        print(f"shard smoke: FAIL ({e!r})")
+    else:
+        print(f"shard smoke: {shard_rec['status']} "
+              f"({shard_rec['n_devices']} devices, bytes parity "
+              f"{shard_rec['bytes_parity']}, acc maxdiff "
+              f"{shard_rec['acc_maxdiff']:.4f})")
+
     # pipeline smoke: pipeline=True bit-parity with the serialized driver
     try:
         from . import pipeline as pipeline_bench
@@ -187,7 +202,8 @@ def run(quick: bool = True) -> dict:
                 "engine_smoke": eng_rec, "sweep_smoke": sweep_rec,
                 "topo_smoke": topo_rec, "obs_smoke": obs_rec,
                 "resil_smoke": resil_rec, "ckpt_smoke": ckpt_rec,
-                "persist_smoke": warm_rec, "pipeline_smoke": pipe_rec,
+                "persist_smoke": warm_rec, "shard_smoke": shard_rec,
+                "pipeline_smoke": pipe_rec,
                 "pipeline_ckpt_smoke": pipeckpt_rec}
     rows = []
     ok = fail = skip = 0
@@ -217,7 +233,8 @@ def run(quick: bool = True) -> dict:
                "engine_smoke": eng_rec, "sweep_smoke": sweep_rec,
                "topo_smoke": topo_rec, "obs_smoke": obs_rec,
                "resil_smoke": resil_rec, "ckpt_smoke": ckpt_rec,
-               "persist_smoke": warm_rec, "pipeline_smoke": pipe_rec,
+               "persist_smoke": warm_rec, "shard_smoke": shard_rec,
+               "pipeline_smoke": pipe_rec,
                "pipeline_ckpt_smoke": pipeckpt_rec}
     common.save("dryrun_matrix", payload)
     return payload

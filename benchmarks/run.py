@@ -13,8 +13,8 @@ import time
 from . import (churn_resilience, color_shift, comm_cost, dryrun_matrix,
                fair_accuracy, fairness_dp_eo, fault_tolerance, k_sensitivity,
                kernel_bench, label_skew, obs_overhead, percluster_accuracy,
-               pipeline, round_throughput, seed_sweep, settlement, topo_adapt,
-               warm_start, warmup_ablation)
+               pipeline, round_throughput, scale_curve, seed_sweep,
+               settlement, topo_adapt, warm_start, warmup_ablation)
 
 SUITES = {
     "percluster_accuracy": percluster_accuracy,   # Fig. 3 / Tab. II
@@ -33,6 +33,7 @@ SUITES = {
     "pipeline": pipeline,                         # double-buffered dispatch
     "seed_sweep": seed_sweep,                     # compile-cache sweep vs naive
     "warm_start": warm_start,                     # persistent XLA cache
+    "scale_curve": scale_curve,                   # sharded engine scaling
     "obs_overhead": obs_overhead,                 # in-scan telemetry cost
     "kernel_bench": kernel_bench,                 # kernels (systems)
     "dryrun_matrix": dryrun_matrix,               # §Dry-run / §Roofline

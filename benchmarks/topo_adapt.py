@@ -87,7 +87,10 @@ def run(quick: bool = True) -> dict:
             s2t = res.comm.seconds_to_target(target)
             tier = _tier_row(net, res)
             rows.append([preset, pol_name, f"{target:.3f}",
-                         f"{b2t / 1e6:.2f} MB", f"{s2t:.1f} s",
+                         common.fmt_to_target(
+                             None if b2t is None else b2t / 1e6,
+                             "{:.2f} MB"),
+                         common.fmt_to_target(s2t, "{:.1f} s"),
                          f"{res.comm.seconds[-1]:.1f} s",
                          (f"{tier['core_acc']:.3f}/{tier['edge_acc']:.3f}"
                           if tier else "-")])
@@ -126,19 +129,25 @@ def run(quick: bool = True) -> dict:
     # --- acceptance: adaptivity must pay on the tiered preset ---
     uni = payload["core-edge/uniform"]
     rel = payload["core-edge/reliability"]
-    assert rel["seconds_to_target"] < uni["seconds_to_target"], (
+    # None is the CommLog never-reached sentinel: the adaptive policy must
+    # reach the target; a uniform policy that never does counts as beaten
+    assert rel["seconds_to_target"] is not None, (
+        "reliability policy never reached the core-edge target accuracy "
+        f"{rel['target']:.3f} — adaptivity must at least converge")
+    assert (uni["seconds_to_target"] is None
+            or rel["seconds_to_target"] < uni["seconds_to_target"]), (
         "reliability policy must strictly reduce simulated "
         f"seconds-to-target on core-edge: {rel['seconds_to_target']} vs "
         f"uniform {uni['seconds_to_target']}")
     assert payload["inclusion"]["min_node"] >= MIN_INCLUSION, (
         "fairness floor violated: some node's inclusion frequency "
         f"{payload['inclusion']['min_node']} < {MIN_INCLUSION}")
-    payload["speedup_core_edge"] = (uni["seconds_to_target"]
-                                    / rel["seconds_to_target"])
+    payload["speedup_core_edge"] = common.to_target_ratio(
+        uni["seconds_to_target"], rel["seconds_to_target"])
     print(f"core-edge seconds-to-target: uniform "
-          f"{uni['seconds_to_target']:.1f}s -> reliability "
-          f"{rel['seconds_to_target']:.1f}s "
-          f"({payload['speedup_core_edge']:.2f}x)")
+          f"{common.fmt_to_target(uni['seconds_to_target'], '{:.1f}s')} "
+          f"-> reliability {rel['seconds_to_target']:.1f}s "
+          f"({common.fmt_to_target(payload['speedup_core_edge'], '{:.2f}x')})")
     common.write_bench("topo", payload)
     return payload
 

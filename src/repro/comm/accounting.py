@@ -10,6 +10,15 @@ rounds carry the last known accuracy for plotting convenience, but target
 queries (``bytes_to_target`` / ``seconds_to_target``) consult only
 real-eval rounds — otherwise the backfilled accuracy would attribute the
 target crossing to a round where nothing was measured.
+
+Sentinel contract: a target the log never measurably crossed answers
+``None`` from BOTH queries, on every path — an empty log, a log fed only
+by :meth:`CommLog.record_bulk` (eval-less by construction), and a log
+whose measured accuracies all fall short. Consumers must treat ``None``
+as "not reached" (render it, skip it, or propagate it) — never compare,
+subtract or divide it; :func:`benchmarks.common.fmt_to_target` /
+:func:`benchmarks.common.to_target_ratio` are the shared None-safe
+helpers for tables and speedup ratios.
 """
 from __future__ import annotations
 

@@ -14,7 +14,7 @@ from repro import resil
 from repro import topo as topo_mod
 
 from .. import split, topology
-from ..bindings import Binding, gossip_mix, local_sgd
+from ..bindings import Binding, gossip_mix, local_sgd, node_vmap
 from ..state import BaselineState, freeze_inactive
 from ..netwire import comm_info, masked_topology, sent_view
 
@@ -57,7 +57,7 @@ def deprl_round(cfg: DeprlConfig, binding: Binding, state: BaselineState,
         p = split.merge_params(core, head)
         return local_sgd(binding, p, bh, cfg.lr)
 
-    params = jax.vmap(local)(cores, heads, batches)
+    params = node_vmap(local)(cores, heads, batches)
     if net is not None:
         params = freeze_inactive(net.active, params, state.params)
 

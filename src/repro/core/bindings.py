@@ -18,8 +18,88 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
 from repro.models import api, cnn, layers, transformer, whisper
 from repro.models.base import CNNConfig, ModelConfig
+
+from . import meshctx
+
+
+def node_matmul(a, x):
+    """THE cross-node contraction: ``out[i, ...] = sum_j a[i, j] x[j, ...]``
+    (``einsum("ij,j...->i...")``). Outside a node-mesh trace context this
+    IS that einsum, bit for bit. Under :func:`repro.core.meshctx.activate`
+    it lowers as a shard_map row block: each device holds a row shard of
+    ``a`` and a node shard of ``x``, all-gathers the senders, and runs the
+    einsum on its rows — per-row arithmetic (and therefore the result) is
+    identical to the unsharded form; only cross-row REDUCTIONS downstream
+    of this op can see a different summation order."""
+    mesh = meshctx.current()
+    if mesh is None:
+        return jnp.einsum("ij,j...->i...", a, x)
+
+    def blk(a_blk, x_blk):
+        xg = jax.lax.all_gather(x_blk, meshctx.NODE_AXIS, tiled=True)
+        return jnp.einsum("ij,j...->i...", a_blk, xg)
+
+    return shard_map(blk, mesh=mesh,
+                     in_specs=(P(meshctx.NODE_AXIS, None),
+                               P(meshctx.NODE_AXIS)),
+                     out_specs=P(meshctx.NODE_AXIS))(a, x)
+
+
+def node_head_matmul(a, onehot, h):
+    """FACADE's Eq. 4 receive contraction
+    ``recv[i, c, ...] = sum_j a[i, j] onehot[j, c] h[j, ...]``
+    (``einsum("ij,jc,j...->ic...")``) — same sharding story as
+    :func:`node_matmul`: row-sharded ``a``, all-gathered senders."""
+    mesh = meshctx.current()
+    if mesh is None:
+        return jnp.einsum("ij,jc,j...->ic...", a, onehot, h)
+
+    def blk(a_blk, o_blk, h_blk):
+        og = jax.lax.all_gather(o_blk, meshctx.NODE_AXIS, tiled=True)
+        hg = jax.lax.all_gather(h_blk, meshctx.NODE_AXIS, tiled=True)
+        return jnp.einsum("ij,jc,j...->ic...", a_blk, og, hg)
+
+    return shard_map(blk, mesh=mesh,
+                     in_specs=(P(meshctx.NODE_AXIS, None),
+                               P(meshctx.NODE_AXIS),
+                               P(meshctx.NODE_AXIS)),
+                     out_specs=P(meshctx.NODE_AXIS))(a, onehot, h)
+
+
+def node_vmap(fn):
+    """``jax.vmap`` over the node axis, partitioned over the active node
+    mesh. Outside a mesh trace context this IS ``jax.vmap(fn)`` — same
+    jaxpr, bit for bit. Under :func:`repro.core.meshctx.activate` the
+    vmapped body runs inside ``shard_map``, so each device maps only its
+    own node block. Load-bearing for the sharded engine's scaling: XLA
+    lowers a vmapped convolution to a grouped conv whose node axis lands
+    in the FEATURE dimension, which GSPMD replicates (all-gathering every
+    activation) rather than shards — so without this wrapper the whole
+    local-training phase runs in full on every device. Per-node
+    arithmetic is untouched either way; every argument and result must be
+    node-stacked (leading dim n)."""
+    mesh = meshctx.current()
+    if mesh is None:
+        return jax.vmap(fn)
+
+    def call(*args):
+        def row(l):
+            return P(meshctx.NODE_AXIS, *([None] * (l.ndim - 1)))
+
+        in_specs = jax.tree.map(row, args)
+        out_sds = jax.eval_shape(jax.vmap(fn), *args)
+        out_specs = jax.tree.map(
+            lambda s: P(meshctx.NODE_AXIS,
+                        *([None] * (len(s.shape) - 1))), out_sds)
+        return shard_map(jax.vmap(fn), mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)(*args)
+
+    return call
 
 
 class Binding(NamedTuple):
@@ -83,13 +163,11 @@ def gossip_mix(w, tree, visible=None, guard=None):
     if guard is None:
         if visible is None:
             return jax.tree.map(
-                lambda p: jnp.einsum("ij,j...->i...", w.astype(p.dtype), p),
-                tree)
+                lambda p: node_matmul(w.astype(p.dtype), p), tree)
         diag = jnp.diagonal(w)
 
         def mix(p, v):
-            out = jnp.einsum("ij,j...->i...", w.astype(p.dtype),
-                             v.astype(p.dtype))
+            out = node_matmul(w.astype(p.dtype), v.astype(p.dtype))
             d = diag.reshape((diag.shape[0],) + (1,) * (p.ndim - 1))
             return (out + d.astype(p.dtype)
                     * (p - v.astype(p.dtype))).astype(p.dtype)
@@ -119,7 +197,7 @@ def gossip_mix(w, tree, visible=None, guard=None):
         m = finite.reshape((n,) + (1,) * (p.ndim - 1))
         # zero quarantined leaves BEFORE the einsum: 0-weight x NaN = NaN
         vs = jnp.where(m > 0, v.astype(p.dtype), 0).astype(p.dtype)
-        out = jnp.einsum("ij,j...->i...", ws.astype(p.dtype), vs)
+        out = node_matmul(ws.astype(p.dtype), vs)
         d = diag.reshape((n,) + (1,) * (p.ndim - 1))
         return (out + d.astype(p.dtype) * (p - vs)).astype(p.dtype)
 

@@ -106,6 +106,16 @@ class EngineSpec:
     #                              it must fork the key. Host-side sink /
     #                              tracer / profiler settings (repro.obs.
     #                              Obs) deliberately never appear here.
+    mesh: Any = None             # node-mesh SHAPE tuple (e.g. ``(8,)``)
+    #                              or None — repro.core.meshctx.normalize's
+    #                              canonical form. A sharded segment
+    #                              program has different layouts and
+    #                              collectives than the single-device one,
+    #                              so sharded and unsharded runs must
+    #                              never collide on an entry. Device
+    #                              OBJECTS never enter the key (shape
+    #                              only): specs stay repr-stable for
+    #                              checkpoint fingerprints.
 
 
 def attach_persist_dir(path) -> str:
@@ -215,7 +225,7 @@ class CacheEntry:
             batch_size=spec.batch_size,
             track_cluster=self.program.track_cluster,
             mixable_of=self.program.mixable_of, topo=spec.topo,
-            obs=spec.obs)
+            obs=spec.obs, mesh=spec.mesh)
 
     def setup(self, key):
         return self.program.setup(key)
@@ -239,6 +249,15 @@ class EngineCache:
     :func:`attach_persist_dir`) so compiled executables survive the
     process. ``max_entries``: LRU bound on live entries; ``None`` (the
     default) keeps the historical unbounded behavior.
+
+    The attached directory is PROCESS-GLOBAL jax state, so a cache built
+    over a temporary directory must detach before that directory is
+    deleted — otherwise every later compile in the process tries to
+    persist into the void and fails. :meth:`close` (or using the cache as
+    a context manager) does exactly that, and only if this cache's
+    directory is still the attached one — it never stomps a newer attach
+    by another cache. In-process entries stay usable after ``close``;
+    only disk persistence stops.
     """
 
     def __init__(self, *, persist_dir=None, max_entries: int | None = None):
@@ -257,6 +276,28 @@ class EngineCache:
         self._evicted_compiles = 0   # keeps compile_count monotone
         self.persist_dir = (attach_persist_dir(persist_dir)
                             if persist_dir is not None else None)
+
+    def close(self) -> None:
+        """Detach the persistent compile directory this cache attached
+        (no-op without ``persist_dir``, idempotent). Call before deleting
+        a temporary persist dir — the attach is process-global, so a
+        deleted-but-still-attached directory would poison every later
+        compile in the process. If ANOTHER cache attached a different
+        directory since (last-attach-wins), that newer attach is left
+        alone."""
+        if self.persist_dir is None:
+            return
+        import jax
+
+        if jax.config.jax_compilation_cache_dir == self.persist_dir:
+            detach_persist_dir()
+        self.persist_dir = None
+
+    def __enter__(self) -> "EngineCache":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     def entry(self, spec: EngineSpec, tracer=None) -> CacheEntry:
         e = self._entries.get(spec)

@@ -41,6 +41,7 @@ from repro import topo as topo_mod
 from repro.data import pipeline
 from repro.obs import frame as obs_frame
 
+from . import meshctx
 from .netwire import round_seconds
 from .state import EngineCarry
 
@@ -91,12 +92,25 @@ class SegmentEngine:
     sampling path). Compiled segment programs are cached per
     ``(length, warmup)``; carries are donated, so the caller must treat the
     passed-in ``EngineCarry`` as consumed.
+
+    ``mesh``: optional 1-D node mesh (``jax.sharding.Mesh`` or anything
+    :func:`repro.core.meshctx.normalize` accepts). When set, the carry's
+    node axis is laid out over the mesh devices (:meth:`place_carry`),
+    the segment program is traced under the mesh context — so the
+    cross-node contractions in :mod:`repro.core.bindings` lower as
+    shard_map row blocks — and segment boundaries pin the carry layout
+    with sharding constraints, keeping donation buffer-compatible across
+    dispatches. ``mesh=None`` is bit-for-bit the historical single-device
+    path: no context is activated and the traced program is unchanged.
+    Per-row arithmetic is identical either way; only reductions ACROSS
+    rows (``round_bytes``/``round_s``/obs-frame scalars) may sum in a
+    different order on a multi-device mesh.
     """
 
     def __init__(self, round_fn: Callable, *, n: int, local_steps: int,
                  batch_size: int, net=None, warmup_fn: Callable | None = None,
                  track_cluster: bool = False, mixable_of: Callable | None = None,
-                 topo=None, obs=None):
+                 topo=None, obs=None, mesh=None):
         self._round = round_fn
         self._warm = warmup_fn if warmup_fn is not None else round_fn
         self._net = net
@@ -112,6 +126,13 @@ class SegmentEngine:
         self._b = batch_size
         self._track = track_cluster
         self._mixable_of = mixable_of
+        self._mesh = meshctx.build(mesh) if not hasattr(mesh, "devices") \
+            else mesh
+        if self._mesh is not None and n % self._mesh.size != 0:
+            raise ValueError(
+                f"mesh of {self._mesh.size} devices must divide n={n} "
+                "nodes evenly: the carry's node axis is row-sharded in "
+                "equal blocks (pad the node count or shrink the mesh)")
         self._compiled: dict[tuple[int, bool], Callable] = {}
         # compile_count tracks XLA compiles, not just fresh (length, warmup)
         # builds: a cached jitted segment RETRACES when the train arrays
@@ -142,7 +163,29 @@ class SegmentEngine:
             gossip = netsim.init_gossip(net, n, self._mixable_of(state))
         topo = topo_mod.init_state(self._topo, net, n)
         fault = resil_mod.init_state(net, n, state)
-        return EngineCarry(state, k_data, chan, gossip, topo, fault)
+        return self.place_carry(
+            EngineCarry(state, k_data, chan, gossip, topo, fault))
+
+    def place_carry(self, carry: EngineCarry) -> EngineCarry:
+        """Commit the carry to the node-mesh layout (leading-``n`` leaves
+        row-sharded, scalars/PRNG keys replicated) — identity when
+        ``mesh=None``. Also the checkpoint-resume hook: a carry rebuilt
+        from host arrays must be re-placed before dispatch so donation
+        reuses correctly laid-out buffers."""
+        if self._mesh is None:
+            return carry
+        return jax.device_put(
+            carry, meshctx.carry_shardings(self._mesh, carry, self._n))
+
+    def place_data(self, train_x, train_y):
+        """Commit the node-stacked train arrays (leading ``[n, ...]``) to
+        the node mesh — identity when ``mesh=None``. One placement per
+        run; every segment dispatch then reads its node shard locally."""
+        if self._mesh is None:
+            return train_x, train_y
+        sh = jax.sharding.NamedSharding(
+            self._mesh, jax.sharding.PartitionSpec(meshctx.NODE_AXIS))
+        return jax.device_put(train_x, sh), jax.device_put(train_y, sh)
 
     # -- one segment = one jitted scan --------------------------------------
     def _build(self, length: int, warmup: bool) -> Callable:
@@ -150,14 +193,32 @@ class SegmentEngine:
         net, n, h, b, track = self._net, self._n, self._h, self._b, self._track
         mixable_of, tcfg = self._mixable_of, self._topo
         ocfg, tiers = self._obs, self._tiers
+        mesh = self._mesh
         mix_of = mixable_of if mixable_of is not None else (lambda s: s)
 
         def segment(carry, start, train_x, train_y):
+            # the mesh context is consulted at TRACE time (this body runs
+            # under jit tracing): with a mesh, the carry layout is pinned
+            # at entry/exit — donation then reuses identically-sharded
+            # buffers — and the bindings' contractions see the context;
+            # with mesh=None nothing here runs and the jaxpr is unchanged
+            with meshctx.activate(mesh):
+                if mesh is not None:
+                    carry = jax.lax.with_sharding_constraint(
+                        carry, meshctx.carry_shardings(mesh, carry, n))
+                carry, outs = _scan(carry, start, train_x, train_y)
+                if mesh is not None:
+                    carry = jax.lax.with_sharding_constraint(
+                        carry, meshctx.carry_shardings(mesh, carry, n))
+                return carry, outs
+
+        def _scan(carry, start, train_x, train_y):
             def step(carry, rnd):
                 prev_state, k_data, chan, gossip, topo, fault = carry
                 k_data, k_b = jax.random.split(k_data)
-                batches = pipeline.sample_round_batches(
-                    k_b, train_x, train_y, h, b)
+                batches = meshctx.constrain_tree(
+                    pipeline.sample_round_batches(k_b, train_x, train_y,
+                                                  h, b), n)
                 conds = published = None
                 if net is not None:
                     conds, chan = netsim.advance_conditions(net, n, rnd,

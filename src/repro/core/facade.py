@@ -25,7 +25,8 @@ from repro import resil
 from repro import topo as topo_mod
 
 from . import split, topology
-from .bindings import Binding, gossip_mix, local_sgd
+from .bindings import (Binding, gossip_mix, local_sgd, node_head_matmul,
+                       node_matmul, node_vmap)
 from .netwire import comm_info, masked_topology, sent_view
 from .state import FacadeState, freeze_inactive
 
@@ -79,12 +80,12 @@ def _aggregate_heads(adj, cluster_id, heads, k, sent_heads=None,
         adj_w = adj * clip
         sent = resil_tree_zero(sent, finite)
     # cnt[i, c] = number of neighbors of i claiming cluster c
-    cnt = jnp.einsum("ij,jc->ic", adj, onehot)              # [n, k]
+    cnt = node_matmul(adj, onehot)                          # [n, k]
     denom = 1.0 + cnt                                        # + own stored head
 
     def agg(h_all, h_sent):
-        recv = jnp.einsum("ij,jc,j...->ic...", adj_w.astype(h_sent.dtype),
-                          onehot.astype(h_sent.dtype), h_sent)
+        recv = node_head_matmul(adj_w.astype(h_sent.dtype),
+                                onehot.astype(h_sent.dtype), h_sent)
         d = denom.reshape(denom.shape + (1,) * (h_all.ndim - 2))
         return ((h_all + recv) / d.astype(h_all.dtype)).astype(h_all.dtype)
 
@@ -109,7 +110,7 @@ def _select_heads(binding: Binding, cores, heads, batches):
         feats = binding.features(core, batch)
         return jax.vmap(lambda h: binding.head_loss(h, feats, batch))(heads_k)
 
-    return jax.vmap(per_node)(cores, heads, batches)        # [n, k]
+    return node_vmap(per_node)(cores, heads, batches)       # [n, k]
 
 
 # --------------------------------------------------------------------------
@@ -183,8 +184,8 @@ def facade_round(fcfg: FacadeConfig, binding: Binding, state: FacadeState,
             heads_k = split.set_head(heads_k, cid, new_head)
         return new_core, heads_k
 
-    new_cores, new_heads = jax.vmap(train_node)(cores, heads, new_cid,
-                                                batches)
+    new_cores, new_heads = node_vmap(train_node)(cores, heads, new_cid,
+                                                 batches)
 
     # --- communication accounting: each node pushes (core, head, cid) ---
     core_bytes = split.tree_size_bytes(

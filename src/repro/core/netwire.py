@@ -31,14 +31,22 @@ import jax.numpy as jnp
 from repro import netsim
 from repro import resil
 
-from . import topology
+from . import meshctx, topology
 
 
 def masked_topology(net, adj):
-    """Apply the round's drop/churn masks (identity when ``net is None``)."""
+    """Apply the round's drop/churn masks (identity when ``net is None``).
+
+    Every round function routes its drawn topology through here, so this
+    is also where the sharded engine pins the ``[n, n]`` adjacency to the
+    node mesh's rows (:func:`repro.core.meshctx.constrain_rows` — a no-op
+    outside a mesh trace context): downstream masks, mixing weights and
+    byte accounting then all inherit the row layout instead of GSPMD
+    replicating the per-round matrices on every device."""
     if net is None:
-        return adj
-    return topology.effective_adjacency(adj, net.edge_mask, net.active)
+        return meshctx.constrain_rows(adj)
+    return meshctx.constrain_rows(
+        topology.effective_adjacency(adj, net.edge_mask, net.active))
 
 
 def stale_view(net, published, fresh):

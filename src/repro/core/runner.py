@@ -42,6 +42,7 @@ from repro import resil as resil_mod
 from repro import topo as topo_mod
 
 from . import facade as facade_mod
+from . import meshctx
 from . import netwire
 from .baselines import (DACConfig, DeprlConfig, DpsgdConfig, ELConfig,
                         dac_round, deprl_round, dpsgd_round, el_round,
@@ -316,6 +317,7 @@ def run_experiment(algo: str, cfg, dataset, *, rounds: int, k: int | None = None
                    topo: "topo_mod.TopoConfig | None" = None,
                    engine: bool = True,
                    pipeline: bool = False,
+                   mesh=None,
                    cache: EngineCache | None = None,
                    eval_batch: int = 256,
                    obs: "obs_mod.Obs | None" = None,
@@ -338,6 +340,19 @@ def run_experiment(algo: str, cfg, dataset, *, rounds: int, k: int | None = None
     ``engine``: ``True`` compiles whole eval-to-eval spans into one XLA
     dispatch (scan-fused segment engine, the fast path); ``False`` runs the
     legacy per-round loop. Same seed => bit-identical trajectories.
+
+    ``mesh`` (engine driver only): shard the node axis across devices —
+    an int / 1-tuple device count or a 1-D ``jax.sharding.Mesh`` (see
+    :mod:`repro.core.meshctx`; ``launch.mesh.make_node_mesh`` builds one).
+    The donated carry is row-sharded over the mesh, gossip mixing becomes
+    a shard_map row-block matmul, and everything else (vmapped local
+    training, netsim/topo/resil row ops) partitions via GSPMD. The node
+    count must divide evenly by the mesh size. ``mesh=None`` (default) is
+    bit-for-bit the historical single-device path; on a mesh, per-row
+    state is identical but cross-node scalar REDUCTIONS (round bytes /
+    seconds, obs frames) can sum in a different order — compare those
+    with a tolerance. The mesh shape is part of the cache key, so
+    sharded and unsharded programs never collide in an ``EngineCache``.
 
     ``pipeline`` (engine driver only): double-buffer the segment loop —
     segment ``t+1`` is dispatched (and ``t``'s eval enqueued) BEFORE
@@ -381,6 +396,12 @@ def run_experiment(algo: str, cfg, dataset, *, rounds: int, k: int | None = None
         raise ValueError(
             "pipeline=True needs the segment engine (engine=True): the "
             "legacy per-round loop has no segment dispatch to overlap")
+    mesh = meshctx.normalize(mesh)
+    if mesh is not None and not engine:
+        raise ValueError(
+            "mesh= needs the segment engine (engine=True): the legacy "
+            "per-round loop is the single-device parity reference and "
+            "never shards")
     if eval_every <= 0:
         raise ValueError(
             f"eval_every={eval_every} must be a positive round count: the "
@@ -398,6 +419,10 @@ def run_experiment(algo: str, cfg, dataset, *, rounds: int, k: int | None = None
                             # here keeps baseline cache keys from forking
     n = dataset.n_nodes
     k = k if k is not None else dataset.k
+    if mesh is not None and n % mesh[0] != 0:
+        raise ValueError(
+            f"mesh={mesh} must divide n={n} nodes evenly: the engine "
+            "row-shards the node axis in equal blocks per device")
     for r in {degree, topo_mod.budget(topo, degree)}:
         if not 1 <= r < n:
             raise ValueError(
@@ -417,7 +442,7 @@ def run_experiment(algo: str, cfg, dataset, *, rounds: int, k: int | None = None
         local_steps=local_steps, batch_size=batch_size, lr=lr,
         warmup_rounds=warmup_rounds, head_jitter=head_jitter, net=net,
         eval_batch=eval_batch, topo=topo,
-        obs=obs.config if obs is not None else None)
+        obs=obs.config if obs is not None else None, mesh=mesh)
     if obs is not None:
         obs.begin_run(algo=algo, seed=seed, rounds=rounds, engine=engine)
     misses0 = cache.misses
@@ -427,6 +452,9 @@ def run_experiment(algo: str, cfg, dataset, *, rounds: int, k: int | None = None
         tracer.event("cache.miss" if cache.misses > misses0
                      else "cache.hit", algo=algo, seed=seed)
     builds0 = cache.evaluator_builds
+    # commit the node-stacked train arrays to the entry's node mesh (a
+    # no-op when mesh=None) so every segment reads its shard locally
+    train_x, train_y = entry.engine.place_data(train_x, train_y)
     setup = entry.setup(k_init)
     evaluator = cache.evaluator(entry.binding, dataset,
                                 batch=spec.eval_batch)
@@ -629,6 +657,9 @@ def _drive_engine(eng, setup: AlgoSetup, hist: _History, k_data,
     if ckpt is not None and os.path.exists(ckpt):
         carry, start_idx, n_frames, finished = _ckpt_resume(
             ckpt, ckpt_fp, carry, hist, obs, tracer)
+        # re-commit the rebuilt carry to the engine's node-mesh layout
+        # (identity off-mesh): donation needs correctly sharded buffers
+        carry = eng.place_carry(carry)
         if finished:
             return
     if pipeline:

@@ -36,6 +36,23 @@ def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
         np.asarray(jax.devices()[:need]).reshape(shape), axes)
 
 
+def make_node_mesh(n_devices: int | None = None):
+    """1-D ``node`` mesh for the sharded segment engine
+    (``run_experiment(mesh=...)`` / ``SegmentEngine(mesh=...)``): the
+    FACADE node axis is data-parallel across devices, gossip mixing
+    becomes a shard_map row-block matmul (:mod:`repro.core.meshctx`).
+
+    ``n_devices=None`` takes every visible device. On a 1-device box,
+    force host devices BEFORE importing jax (the dryrun.py pattern):
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+    """
+    from repro.core import meshctx
+
+    if n_devices is None:
+        n_devices = len(jax.devices())
+    return meshctx.build((int(n_devices),))
+
+
 HW = {
     # TPU v5e per chip
     "peak_flops_bf16": 197e12,   # FLOP/s

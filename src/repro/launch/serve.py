@@ -189,10 +189,14 @@ def main(argv=None) -> None:
     if net is not None:
         half = comm.seconds_to_target(0.5)
         full = comm.seconds_to_target(1.0)
+
+        def _drain(v):  # None = that drain fraction was never reached
+            return "not reached" if v is None else f"{v:.3f}s"
+
         print(f"SLO [{net.name}]: {comm.total_hours * 3600:.3f} simulated "
               f"network seconds total ({comm.total_hours:.6f} h, "
               f"{comm.total_gb * 1e3:.3f} MB on the wire); "
-              f"p50 queue drain {half:.3f}s, full drain {full:.3f}s")
+              f"p50 queue drain {_drain(half)}, full drain {_drain(full)}")
     if tracer is not None:
         tracer.event(
             "slo", requests=done, tokens=total_tok, wall_s=dt,

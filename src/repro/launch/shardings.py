@@ -205,6 +205,19 @@ def opt_specs(opt_sds, pspecs):
     return out
 
 
+def node_carry_specs(carry, n: int):
+    """Partition specs for a segment-engine :class:`EngineCarry` (or any
+    node-stacked pytree) over a 1-D ``node`` mesh — the sharded engine's
+    layout contract, delegated to :func:`repro.core.meshctx.node_spec`:
+    leading dim == ``n`` -> ``P('node', None, ...)`` (so ``[n, n]``
+    mixing weights / channel state / link matrices shard along ROWS),
+    everything else (scalars, PRNG keys) replicated. Pair with
+    :func:`named` over a ``make_node_mesh()`` mesh for shardings."""
+    from repro.core import meshctx
+
+    return jax.tree.map(lambda l: meshctx.node_spec(l, n), carry)
+
+
 def named(mesh: Mesh, spec_tree):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
                         is_leaf=lambda x: isinstance(x, P))

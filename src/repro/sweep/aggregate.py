@@ -83,5 +83,10 @@ def aggregate_cell(results, targets=()) -> dict:
         if reached_b:
             entry["bytes"] = _ms(reached_b)
             entry["seconds"] = _ms(s for s in ss if s is not None)
+        else:
+            # explicit CommLog sentinel: no seed ever crossed this target
+            # — consumers key on `is None`, not on a missing key
+            entry["bytes"] = None
+            entry["seconds"] = None
         out["to_target"][f"{t:g}"] = entry
     return out

@@ -160,7 +160,11 @@ def run_sweep(cells: Sequence[SweepCell], seeds: Sequence[int], *,
 
     A failing cell is recorded (``CellResult.error``, a
     ``sweep.cell_failed`` event) and the grid CONTINUES; ``RuntimeError``
-    is raised only when every cell failed.
+    is raised only when every cell failed. A degenerate grid — no cells
+    or no seeds — raises ``ValueError`` up front (historically an empty
+    ``seeds`` made every cell "fail" on an empty aggregation and
+    surfaced as the misleading every-cell-failed RuntimeError); a grid
+    whose every cell is fingerprint-skipped returns cleanly.
     """
     if cache is not None and (persist_dir is not None
                               or max_entries is not None):
@@ -172,6 +176,13 @@ def run_sweep(cells: Sequence[SweepCell], seeds: Sequence[int], *,
         persist_dir=persist_dir, max_entries=max_entries)
     tracer = obs.tracer if obs is not None else None
     seeds = tuple(int(s) for s in seeds)
+    cells = list(cells)
+    if not cells:
+        raise ValueError("run_sweep got an empty cell grid; build at "
+                         "least one SweepCell (grid() with empty axes?)")
+    if not seeds:
+        raise ValueError("run_sweep got no seeds; pass at least one "
+                         "(e.g. seeds=range(3))")
     names = [c.name for c in cells]
     if len(set(names)) != len(names):
         raise ValueError(f"duplicate sweep cell names: {names}")

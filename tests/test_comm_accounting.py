@@ -52,3 +52,53 @@ def test_default_round_s_keeps_clock_at_zero():
     log.record(2, 100, acc=0.2)
     assert log.seconds == [0.0, 0.0]
     assert log.total_hours == 0.0
+
+
+# ------------------------------------------- never-reached sentinel -------
+def test_sentinel_on_every_never_reached_path():
+    """The sentinel contract (module docstring): a target the log never
+    measurably crossed answers None from BOTH queries on EVERY path —
+    empty log, record_bulk-only log (eval-less by construction), and a
+    log whose measured accuracies all fall short."""
+    empty = CommLog()
+    assert empty.bytes_to_target(0.0) is None
+    assert empty.seconds_to_target(0.0) is None
+
+    bulk = CommLog()
+    bulk.record_bulk([1, 2, 3], [100.0, 100.0, 100.0],
+                     [1.0, 1.0, 1.0])
+    assert bulk.evaled == [False, False, False]
+    assert bulk.bytes_to_target(0.0) is None
+    assert bulk.seconds_to_target(0.0) is None
+
+    short = CommLog()
+    short.record(1, 100, acc=0.4, round_s=2.0)
+    short.record(2, 100, acc=0.5, round_s=2.0)
+    assert short.bytes_to_target(0.6) is None
+    assert short.seconds_to_target(0.6) is None
+    # ...and both answer together once a measured eval crosses
+    short.record(3, 100, acc=0.7, round_s=2.0)
+    assert short.bytes_to_target(0.6) == 300
+    assert short.seconds_to_target(0.6) == 6.0
+
+
+def test_sentinel_helpers_render_and_propagate():
+    """The shared None-safe consumers: tables render "not reached"
+    instead of crashing a float format, and speedup ratios propagate the
+    sentinel (a run that never got there has no finite speedup)."""
+    import pathlib
+    import sys
+    root = str(pathlib.Path(__file__).resolve().parents[1])
+    if root not in sys.path:      # bare `pytest` has no cwd on sys.path
+        sys.path.insert(0, root)
+    from benchmarks.common import fmt_to_target, to_target_ratio
+
+    assert fmt_to_target(None) == "not reached"
+    assert fmt_to_target(None, "{:.2f} MB") == "not reached"
+    assert fmt_to_target(12.5) == "12.5 s"
+    assert fmt_to_target(1.5, "{:.2f} MB") == "1.50 MB"
+    assert to_target_ratio(None, 2.0) is None
+    assert to_target_ratio(2.0, None) is None
+    assert to_target_ratio(None, None) is None
+    assert to_target_ratio(2.0, 0.0) is None         # no div-by-zero
+    assert to_target_ratio(6.0, 2.0) == pytest.approx(3.0)

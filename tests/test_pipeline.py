@@ -231,6 +231,65 @@ def test_attach_persist_dir_creates_and_returns(tmp_path):
     assert target.is_dir()
 
 
+def test_cache_close_detaches_before_dir_deletion(tiny_ds, tmp_path):
+    """Regression: a temp persist dir deleted while still attached
+    poisons every later compile in the process (XLA persists into the
+    void). ``close()`` detaches, is idempotent, and a post-close compile
+    in the same process works with the directory gone."""
+    import shutil
+
+    pdir = tmp_path / "xla-tmp"
+    cache = EngineCache(persist_dir=str(pdir))
+    run_experiment("el", CFG, tiny_ds, cache=cache, **KW)
+    cache.close()
+    assert cache.persist_dir is None
+    cache.close()                                    # idempotent
+    shutil.rmtree(pdir)
+    # dir is gone AND detached: a fresh compile must still succeed
+    fresh = EngineCache()
+    got = run_experiment("el", CFG, tiny_ds, cache=fresh,
+                         **{**KW, "local_steps": 3})
+    assert np.isfinite(got.final_acc).all()
+
+
+def test_cache_context_manager_detaches(tmp_path):
+    import jax
+
+    pdir = str(tmp_path / "xla-cm")
+    try:
+        with EngineCache(persist_dir=pdir) as cache:
+            assert cache.persist_dir == pdir
+            assert jax.config.jax_compilation_cache_dir == pdir
+        assert cache.persist_dir is None
+        assert jax.config.jax_compilation_cache_dir is None
+    finally:
+        detach_persist_dir()
+
+
+def test_cache_close_never_stomps_a_newer_attach(tmp_path):
+    """Attach is process-global, last-attach-wins: closing an OLDER cache
+    must leave a newer cache's directory attached."""
+    import jax
+
+    old = EngineCache(persist_dir=str(tmp_path / "old"))
+    new = EngineCache(persist_dir=str(tmp_path / "new"))
+    try:
+        old.close()                   # old's dir is no longer attached:
+        assert jax.config.jax_compilation_cache_dir == new.persist_dir
+        new.close()
+        assert jax.config.jax_compilation_cache_dir is None
+    finally:
+        detach_persist_dir()
+
+
+def test_cache_close_without_persist_dir_is_noop():
+    cache = EngineCache()
+    cache.close()                                    # nothing to detach
+    assert cache.persist_dir is None
+    with EngineCache() as cm:                        # context form too
+        assert cm.persist_dir is None
+
+
 # ------------------------------------------------------- LRU bound --------
 def _spec(lr: float) -> EngineSpec:
     return EngineSpec(algo="el", cfg=CFG, n=4, k=2, degree=2,

@@ -251,6 +251,7 @@ _PERTURB = {
     "topo": lambda v: (TopoConfig(policy="reliability") if v is None
                        else None),
     "obs": lambda v: (ObsConfig() if v is None else None),
+    "mesh": lambda v: ((1,) if v is None else None),
 }
 
 

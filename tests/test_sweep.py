@@ -262,12 +262,44 @@ def test_sweep_to_target_table_and_json(tiny_ds, tmp_path):
     assert tt["0"]["reached_frac"] == 1.0        # acc >= 0 at the first eval
     assert tt["0"]["bytes"]["mean"] > 0
     assert tt["2"]["reached_frac"] == 0.0        # acc can never reach 2.0
-    assert "bytes" not in tt["2"]
+    # the CommLog never-reached sentinel propagates as an EXPLICIT None —
+    # consumers key on `is None`, not on a missing key
+    assert tt["2"]["bytes"] is None and tt["2"]["seconds"] is None
     import json
     blob = json.loads(path.read_text())
     assert blob["seeds"] == list(SEEDS)
     assert blob["cells"]["el"]["summary"]["n_seeds"] == len(SEEDS)
     assert blob["cache"]["entries"] == 1
+
+
+def test_sweep_rejects_degenerate_grids(tiny_ds):
+    """Regression: an empty seeds sequence used to make EVERY cell 'fail'
+    on an empty aggregation and surface as a misleading every-cell-failed
+    RuntimeError; an empty cell grid returned a useless empty SweepResult.
+    Both now raise a clear ValueError up front."""
+    with pytest.raises(ValueError, match="empty cell grid"):
+        run_sweep([], SEEDS)
+    with pytest.raises(ValueError, match="no seeds"):
+        run_sweep([_cell("el", tiny_ds)], [])
+    with pytest.raises(ValueError, match="no seeds"):
+        run_sweep([_cell("el", tiny_ds)], iter(()))   # exhausted iterator
+
+
+def test_sweep_all_cells_skipped_returns_cleanly(tiny_ds, tmp_path):
+    """A rerun whose every cell is fingerprint-skipped must return the
+    reloaded summaries, not trip the every-cell-failed guard (skipped
+    cells carry no error)."""
+    cells = lambda: [_cell("el", tiny_ds), _cell("dac", tiny_ds)]  # noqa: E731
+    first = run_sweep(cells(), SEEDS[:2], ckpt_dir=tmp_path)
+    assert not any(c.skipped for c in first.cells)
+    again = run_sweep(cells(), SEEDS[:2], ckpt_dir=tmp_path)
+    assert all(c.skipped for c in again.cells)
+    assert all(c.error is None for c in again.cells)
+    for a, b in zip(first.cells, again.cells):
+        assert b.results == []                       # summary-only reload
+        assert b.summary["n_seeds"] == a.summary["n_seeds"]
+        assert b.summary["final_acc_mean"] == pytest.approx(
+            a.summary["final_acc_mean"])
 
 
 def test_sweep_rejects_seed_kwarg_and_dup_names(tiny_ds):
