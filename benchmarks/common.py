@@ -64,15 +64,32 @@ def save(name: str, payload: dict) -> pathlib.Path:
     return out
 
 
+def trajectory_path() -> pathlib.Path:
+    """Where :func:`write_bench` appends its history. Module-level
+    ``RESULTS_DIR`` lookup at call time so tests can monkeypatch it."""
+    return RESULTS_DIR / "TRAJECTORY.jsonl"
+
+
 def write_bench(name: str, payload: dict) -> pathlib.Path:
     """The one way a benchmark writes its ``BENCH_<name>.json``: stamps a
     ``manifest`` block (payload content fingerprint + jax version +
     timestamp, :func:`repro.obs.bench_stamp`) so every benchmark artifact
-    records what exactly produced it, then routes through :func:`save`."""
+    records what exactly produced it, then routes through :func:`save`.
+
+    Every payload is ALSO appended to ``results/bench/TRAJECTORY.jsonl``
+    (one record per write, never truncated) — the across-runs history
+    ``benchmarks/check_regress.py`` diffs latest-vs-previous against.
+    """
     from repro.obs import bench_stamp
 
     payload = dict(payload)
     payload["manifest"] = bench_stamp(name, payload)
+    traj = trajectory_path()
+    traj.parent.mkdir(parents=True, exist_ok=True)
+    with traj.open("a") as fh:
+        fh.write(json.dumps({"name": name, "payload": payload},
+                            default=repr) + "\n")
+        fh.flush()
     return save(f"BENCH_{name}", payload)
 
 

@@ -115,6 +115,23 @@ def run(quick: bool = True) -> dict:
               f"{obs_rec['jsonl_records']} JSONL records, spans "
               f"{obs_rec['spans']})")
 
+    # health+report smoke: an unguarded NaN-corruption run must be
+    # flagged (fail verdict + health.* events) while a clean run stays
+    # quiet, and the report CLI must render from the real manifest +
+    # JSONL; reported, never aborts the table
+    try:
+        from . import obs_overhead as obs_bench
+        health_rec = obs_bench.smoke_health()
+    except Exception as e:
+        health_rec = {"status": "fail", "error": repr(e)}
+        print(f"health smoke: FAIL ({e!r})")
+    else:
+        print(f"health smoke: {health_rec['status']} "
+              f"(clean={health_rec['clean_verdict']}, "
+              f"storm={health_rec['storm_verdict']} via "
+              f"{health_rec['storm_events']}, report rendered "
+              f"{health_rec['report_rendered']})")
+
     # resil smoke: fault off-switch bit-parity + a guarded crash/NaN
     # storm staying finite while shedding bytes; reported, never aborts
     try:
@@ -201,6 +218,7 @@ def run(quick: bool = True) -> dict:
         return {"netsim_smoke": net_rec, "netsim_v2_smoke": v2_rec,
                 "engine_smoke": eng_rec, "sweep_smoke": sweep_rec,
                 "topo_smoke": topo_rec, "obs_smoke": obs_rec,
+                "health_smoke": health_rec,
                 "resil_smoke": resil_rec, "ckpt_smoke": ckpt_rec,
                 "persist_smoke": warm_rec, "shard_smoke": shard_rec,
                 "pipeline_smoke": pipe_rec,
@@ -232,6 +250,7 @@ def run(quick: bool = True) -> dict:
                "netsim_smoke": net_rec, "netsim_v2_smoke": v2_rec,
                "engine_smoke": eng_rec, "sweep_smoke": sweep_rec,
                "topo_smoke": topo_rec, "obs_smoke": obs_rec,
+               "health_smoke": health_rec,
                "resil_smoke": resil_rec, "ckpt_smoke": ckpt_rec,
                "persist_smoke": warm_rec, "shard_smoke": shard_rec,
                "pipeline_smoke": pipe_rec,

@@ -148,5 +148,52 @@ def smoke() -> dict:
             "spans": sorted(obs.tracer.rollup()["spans"])}
 
 
+def smoke_health() -> dict:
+    """Health + report smoke for the dry-run matrix: an unguarded
+    NaN-corruption run (``resil`` faults, ``robust=False``) must come
+    back with a ``fail`` verdict and fired ``health.*`` events, a
+    fault-free run must stay a quiet ``ok``, and the report CLI must
+    render markdown from the faulted run's real manifest + JSONL."""
+    import dataclasses
+    import tempfile
+
+    from repro.configs.facade_paper import lenet
+    from repro.data.synthetic import SynthSpec
+    from repro.netsim import NetworkConfig
+    from repro.obs.report import build_report
+    from repro.resil import FaultConfig
+
+    spec = SynthSpec(n_classes=4, image_size=16, samples_per_class=8,
+                     test_per_class=8, seed=3)
+    ds = common.make_ds(spec, (3, 1), ("rot0", "rot180"))
+    cfg = lenet(smoke=True).replace(n_classes=4)
+    kw = dict(rounds=4, k=2, degree=2, local_steps=2, batch_size=4,
+              lr=0.05, eval_every=2, seed=0)
+    ideal = NetworkConfig.preset("ideal")
+    storm = dataclasses.replace(ideal, faults=FaultConfig(
+        corrupt_rate=0.6, corrupt_mode="nan", robust=False))
+    with tempfile.TemporaryDirectory() as td:
+        clean_obs = Obs(ObsConfig(), jsonl=f"{td}/clean.jsonl", out_dir=td)
+        run_experiment("facade", cfg, ds, net=ideal, obs=clean_obs, **kw)
+        clean_verdict = clean_obs.manifests[-1].health["verdict"]
+        clean_events = [e for e in clean_obs.tracer.events
+                       if e["name"].startswith("health.")]
+
+        storm_obs = Obs(ObsConfig(), jsonl=f"{td}/storm.jsonl", out_dir=td)
+        run_experiment("facade", cfg, ds, net=storm, obs=storm_obs, **kw)
+        storm_verdict = storm_obs.manifests[-1].health["verdict"]
+        storm_events = [e["name"] for e in storm_obs.tracer.events
+                        if e["name"].startswith("health.")]
+        _, md = build_report(f"{td}/manifest_facade-seed0.json")
+        rendered = "## Health" in md and "## Fairness trajectory" in md
+    ok = (clean_verdict == "ok" and not clean_events
+          and storm_verdict == "fail" and storm_events and rendered)
+    return {"status": "ok" if ok else "fail",
+            "clean_verdict": clean_verdict,
+            "storm_verdict": storm_verdict,
+            "storm_events": sorted(set(storm_events)),
+            "report_rendered": bool(rendered)}
+
+
 if __name__ == "__main__":
     run()

@@ -10,11 +10,12 @@ import argparse
 import sys
 import time
 
-from . import (churn_resilience, color_shift, comm_cost, dryrun_matrix,
-               fair_accuracy, fairness_dp_eo, fault_tolerance, k_sensitivity,
-               kernel_bench, label_skew, obs_overhead, percluster_accuracy,
-               pipeline, round_throughput, scale_curve, seed_sweep,
-               settlement, topo_adapt, warm_start, warmup_ablation)
+from . import (check_regress, churn_resilience, color_shift, comm_cost,
+               dryrun_matrix, fair_accuracy, fairness_dp_eo, fault_tolerance,
+               k_sensitivity, kernel_bench, label_skew, obs_overhead,
+               percluster_accuracy, pipeline, round_throughput, scale_curve,
+               seed_sweep, settlement, topo_adapt, warm_start,
+               warmup_ablation)
 
 SUITES = {
     "percluster_accuracy": percluster_accuracy,   # Fig. 3 / Tab. II
@@ -37,6 +38,8 @@ SUITES = {
     "obs_overhead": obs_overhead,                 # in-scan telemetry cost
     "kernel_bench": kernel_bench,                 # kernels (systems)
     "dryrun_matrix": dryrun_matrix,               # §Dry-run / §Roofline
+    "check_regress": check_regress,               # trajectory perf gate
+    #   LAST: diffs the records this very invocation just appended
 }
 
 

@@ -34,7 +34,6 @@ import numpy as np
 from repro import checkpoint
 from repro.comm import CommLog
 from repro.data import pipeline
-from repro.fairness import demographic_parity, equalized_odds, fair_accuracy
 from repro.models import cnn as cnn_mod
 from repro import netsim
 from repro import obs as obs_mod
@@ -65,6 +64,12 @@ class RunResult:
     final_acc: list            # per-cluster accuracy at the end
     node_acc: Any = None       # final per-NODE accuracy [n] (per-tier /
     #                            fairness-floor tables; repro.topo)
+    eval_frames: list = dataclasses.field(default_factory=list)
+    #                            per-eval EvalFrame fairness trajectory
+    #                            (repro.obs.evalframe) — recorded for every
+    #                            run, obs attached or not: pure host
+    #                            bookkeeping over the arrays the evaluator
+    #                            already drains
 
     def best_fair_acc(self) -> float:
         return max(v for _, v in self.fair_acc) if self.fair_acc else 0.0
@@ -248,12 +253,16 @@ class _History:
     weighted mean accuracy and the target-accuracy stop condition."""
 
     def __init__(self, node_cluster, n: int, evaluator, models_of,
-                 target_acc, verbose: bool, algo: str, n_classes: int):
+                 target_acc, verbose: bool, algo: str, n_classes: int,
+                 tiers=None, obs=None):
         self.comm = CommLog()
         self.acc_hist, self.fair_hist, self.cluster_hist = [], [], []
         self.dp = self.eo = 0.0
         self.accs = []
         self.node_acc = None
+        self.eval_frames = []           # per-eval EvalFrame trajectory
+        self._prev_eval_cid = None      # cluster ids at the previous eval
+        #                                 (the churn baseline)
         self._weights = np.asarray(node_cluster)
         self._n = n
         self._evaluator = evaluator
@@ -262,13 +271,22 @@ class _History:
         self._verbose = verbose
         self._algo = algo
         self._n_classes = n_classes
+        self._tiers = None if tiers is None else np.asarray(tiers)
+        self._obs = obs
 
     def eval_begin(self, state):
         """Enqueue the eval's per-cluster predictions asynchronously (no
         host sync) — the pipelined driver calls this BEFORE dispatching
         the next segment (which donates the state buffers), then settles
-        with :meth:`eval_finish` while that segment computes."""
-        return self._evaluator.begin(self._models_of(state))
+        with :meth:`eval_finish` while that segment computes.
+
+        Alongside the prediction dispatches, an async device COPY of the
+        state's cluster assignment is enqueued (FACADE only) for the
+        EvalFrame's churn column — ``jnp.copy``, not a host read, so the
+        buffer survives the next segment's donation without a sync."""
+        cid = getattr(state, "cluster_id", None)
+        return (self._evaluator.begin(self._models_of(state)),
+                None if cid is None else jnp.copy(cid))
 
     def eval_round(self, state, rnd: int, round_bytes: float,
                    round_s: float) -> bool:
@@ -279,32 +297,48 @@ class _History:
 
     def eval_finish(self, pending, rnd: int, round_bytes: float,
                     round_s: float) -> bool:
+        pending, eval_cid = pending
         accs, preds_c, labels_c, node_acc = self._evaluator.finish(pending)
         cids = getattr(self._evaluator, "cluster_ids",
                        tuple(range(len(accs))))
         self.accs = accs
         self.node_acc = node_acc
         self.acc_hist.append((rnd, accs))
-        fa = fair_accuracy(accs)
-        self.fair_hist.append((rnd, fa))
-        self.dp = demographic_parity(preds_c, self._n_classes)
-        self.eo = equalized_odds(preds_c, labels_c, self._n_classes)
         # node-weighted mean over the clusters that exist; with no empty
         # clusters ``cids == range(len(accs))`` and this is bit-for-bit
         # the historical enumerate() formula
         mean_acc = float(np.mean(
             [a * (self._weights == c).sum()
              for c, a in zip(cids, accs)]) * len(accs) / self._n)
+        # ONE shared hook (the eval twin of compute_frame): DP/EO/fair-acc
+        # are computed inside the frame with the same repro.fairness calls
+        # this method historically made, and the run's final scalars are
+        # read OFF the frame — the series' last entry IS the final scalar,
+        # bit-for-bit, on both drivers
+        eval_cid = None if eval_cid is None else np.asarray(eval_cid)
+        frame = obs_mod.compute_eval_frame(
+            rnd, accs, cids, preds_c, labels_c, node_acc,
+            self._n_classes, mean_acc=mean_acc, tiers=self._tiers,
+            prev_cid=self._prev_eval_cid, cid=eval_cid)
+        self._prev_eval_cid = eval_cid
+        self.eval_frames.append(frame)
+        if self._obs is not None:
+            self._obs.record_eval(frame)
+        self.fair_hist.append((rnd, frame.fair_acc))
+        self.dp = frame.dp
+        self.eo = frame.eo
         self.comm.record(rnd, round_bytes, mean_acc, round_s=round_s)
         if self._verbose:
-            print(f"  [{self._algo}] round {rnd}: acc={accs} fair={fa:.3f}")
+            print(f"  [{self._algo}] round {rnd}: acc={accs} "
+                  f"fair={frame.fair_acc:.3f}")
         return self._target is not None and mean_acc >= self._target
 
     def result(self, algo: str) -> RunResult:
         return RunResult(algo=algo, acc_per_cluster=self.acc_hist,
                          fair_acc=self.fair_hist, dp=self.dp, eo=self.eo,
                          comm=self.comm, cluster_history=self.cluster_hist,
-                         final_acc=self.accs, node_acc=self.node_acc)
+                         final_acc=self.accs, node_acc=self.node_acc,
+                         eval_frames=self.eval_frames)
 
 
 # --------------------------------------------------------------------------
@@ -461,7 +495,10 @@ def run_experiment(algo: str, cfg, dataset, *, rounds: int, k: int | None = None
     if tracer is not None and cache.evaluator_builds > builds0:
         tracer.event("evaluator.build", batch=spec.eval_batch)
     hist = _History(dataset.node_cluster, n, evaluator, setup.models_of,
-                    target_acc, verbose, algo, entry.binding.cfg.n_classes)
+                    target_acc, verbose, algo, entry.binding.cfg.n_classes,
+                    tiers=(np.asarray(obs_mod.tiers_of(net, n))
+                           if net is not None else None),
+                    obs=obs)
     ckpt_fp = None
     if ckpt is not None:
         # everything that shapes the trajectory or the resume schedule;
@@ -487,13 +524,27 @@ def run_experiment(algo: str, cfg, dataset, *, rounds: int, k: int | None = None
                           local_steps=local_steps, batch_size=batch_size,
                           net=net, n=n, topo=topo, obs=obs)
     if obs is not None:
+        health = None
+        if obs.health_config is not None:
+            ctx = obs_mod.HealthContext(
+                n=n, warmup_rounds=warmup_rounds,
+                inclusion_floor=(topo.min_inclusion
+                                 if topo_mod.adaptive(topo) else None),
+                faults=net is not None and net.faults is not None)
+            health = obs_mod.evaluate_health(
+                obs.health_config, ctx, obs.run_frames_table(),
+                obs.run_eval_table(), tracer=obs.tracer).to_json()
+        sink_path = getattr(obs.sink, "path", None)
         obs.end_run(obs_mod.RunManifest.build(
             kind="run", name=f"{algo}-seed{seed}", spec=spec,
             settings={"rounds": rounds, "eval_every": eval_every,
                       "engine": engine, "pipeline": pipeline, "seed": seed,
                       "net": repr(net),
-                      "topo": repr(topo), "obs": repr(obs.config)},
-            timing=obs.tracer.rollup(), cache=cache.stats()))
+                      "topo": repr(topo), "obs": repr(obs.config),
+                      "jsonl": (None if sink_path is None
+                                else str(sink_path))},
+            timing=obs.tracer.rollup(), cache=cache.stats(),
+            health=health))
     return hist.result(algo)
 
 
@@ -523,6 +574,17 @@ def _hist_snapshot(hist: _History) -> dict:
         "accs": np.asarray(hist.accs, np.float64),
         "node_acc": (None if hist.node_acc is None
                      else np.asarray(hist.node_acc)),
+        # the per-eval fairness trajectory: one dict of float64/int64
+        # arrays per EvalFrame (plain floats round-trip exactly, so the
+        # resumed trajectory is bit-for-bit the live one)
+        "eval_frames": [
+            {name: np.asarray(getattr(f, name),
+                              np.int64 if name in ("round", "cluster_ids")
+                              else np.float64)
+             for name in obs_mod.EVAL_FIELDS}
+            for f in hist.eval_frames],
+        "prev_eval_cid": (None if hist._prev_eval_cid is None
+                          else np.asarray(hist._prev_eval_cid)),
     }
 
 
@@ -549,6 +611,24 @@ def _hist_restore(hist: _History, snap: dict):
     hist.accs = [float(a) for a in snap["accs"]]
     hist.node_acc = (None if snap["node_acc"] is None
                      else np.asarray(snap["node_acc"]))
+    # defensive .get: checkpoints written before the eval-frame series
+    # existed restore to an empty trajectory instead of KeyError-ing
+    hist.eval_frames = []
+    for e in snap.get("eval_frames", []):
+        frame = obs_mod.EvalFrame(
+            round=int(e["round"]),
+            acc=tuple(float(a) for a in np.atleast_1d(e["acc"])),
+            cluster_ids=tuple(int(c)
+                              for c in np.atleast_1d(e["cluster_ids"])),
+            **{name: float(e[name]) for name in obs_mod.EVAL_SCALAR_FIELDS
+               if name != "round"})
+        hist.eval_frames.append(frame)
+        if hist._obs is not None:
+            # replay into the live Obs, like the metrics-frame sidecars:
+            # eval_table / health / JSONL see the pre-crash evals too
+            hist._obs.record_eval(frame)
+    prev = snap.get("prev_eval_cid")
+    hist._prev_eval_cid = None if prev is None else np.asarray(prev)
 
 
 def _frame_path(ckpt: str, index: int) -> str:

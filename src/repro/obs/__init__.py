@@ -1,6 +1,7 @@
-"""repro.obs — in-scan telemetry, span tracing and run manifests.
+"""repro.obs — in-scan telemetry, fairness trajectories, run health
+and run manifests.
 
-Three layers, composable but independent:
+Four layers, composable but independent:
 
 * **device**: :class:`ObsConfig` + :class:`MetricsFrame`
   (:mod:`.frame`) — a fixed pytree of per-round scalars (update/param
@@ -8,13 +9,23 @@ Three layers, composable but independent:
   gossip-staleness histogram, inclusion) computed INSIDE the engine's
   ``lax.scan`` and drained in the segment's existing single bulk
   ``device_get`` — zero extra dispatches, zero extra host syncs;
+* **eval**: :class:`EvalFrame` (:mod:`.evalframe`) — one fairness
+  observation per real eval (DP, EO, fair/worst-cluster/per-tier
+  accuracy, cluster churn), pure host bookkeeping over arrays the
+  evaluator already drains — zero extra dispatches, recorded whether
+  or not a device ``ObsConfig`` is attached;
 * **host**: :class:`Tracer` (:mod:`.trace`) — nested spans around
   compile / segment dispatch / scalar drain / eval, ``EngineCache``
-  hit/miss events, optional ``jax.profiler`` hook;
+  hit/miss events, optional ``jax.profiler`` hook — plus the
+  :mod:`.health` rule engine judging both telemetry streams into a
+  per-run :class:`HealthReport` verdict, and :mod:`.report` rendering
+  manifest + JSONL into markdown/JSON run reports
+  (``python -m repro.obs.report``);
 * **disk**: :class:`JsonlSink` + :class:`RunManifest` (:mod:`.sink`) —
   one JSONL record format for training AND serving telemetry, plus a
-  manifest (config fingerprint, spec key, settings, timing rollup)
-  written next to results and stamped into every ``BENCH_*.json``.
+  manifest (config fingerprint, spec key, settings, timing rollup,
+  health verdict) written next to results and stamped into every
+  ``BENCH_*.json``.
 
 Usage — any algorithm, either driver, any netsim/topo combination::
 
@@ -25,15 +36,17 @@ Usage — any algorithm, either driver, any netsim/topo combination::
               out_dir="results/obs")
     res = run_experiment("facade", cfg, ds, rounds=100, obs=obs)
     obs.frames_table()["cluster_switches"]   # per-round settlement curve
+    obs.eval_table()["dp"]                   # DP gap over training
+    obs.manifests[-1].health["verdict"]      # "ok" | "warn" | "fail"
     obs.tracer.rollup()                      # where the wall-clock went
-    obs.manifests[-1].fingerprint            # what exactly ran
 
 ``obs=None`` (the default) is bit-for-bit the pre-obs path, and an
 ENABLED frame never perturbs a trajectory either — telemetry is pure
 observation (both pinned in ``tests/test_obs.py`` for all 5 algorithms
 on both drivers). Only :class:`ObsConfig` (the device-side frame spec)
-is an ``EngineSpec`` cache-key component; host-side sink/profiler
-settings on :class:`Obs` never fork the key or recompile anything.
+is an ``EngineSpec`` cache-key component; host-side eval telemetry,
+health rules and sink/profiler settings on :class:`Obs` never fork the
+key or recompile anything.
 """
 from __future__ import annotations
 
@@ -42,8 +55,14 @@ from typing import Any
 
 import numpy as np
 
+from .evalframe import (EVAL_FIELDS, EVAL_SCALAR_FIELDS,  # noqa: F401
+                        EvalFrame, compute_eval_frame, frame_record)
+from .evalframe import eval_table as _eval_table
 from .frame import (FRAME_FIELDS, MetricsFrame, ObsConfig,  # noqa: F401
                     compute_frame, tiers_of)
+from .health import (HealthConfig, HealthContext,  # noqa: F401
+                     HealthIssue, HealthReport, worst_verdict)
+from .health import evaluate as evaluate_health  # noqa: F401
 from .sink import (JsonlSink, RunManifest, bench_stamp,  # noqa: F401
                    fingerprint, read_jsonl)
 from .trace import Tracer, maybe_profile  # noqa: F401
@@ -54,28 +73,39 @@ class Obs:
 
     ``config``: the device-side :class:`ObsConfig` (``None`` = spans and
     manifests only, no in-scan frame — and no cache-key fork);
+    ``health``: the :class:`HealthConfig` thresholds the driver judges
+    each run against at run end (``None`` = skip health evaluation);
     ``jsonl``/``sink``: where events go (``jsonl`` path builds a
     :class:`JsonlSink`); ``out_dir``: where per-run manifests are
     written; ``profile_dir``: optional ``jax.profiler`` trace directory.
 
-    One ``Obs`` may span many runs (a sweep shares one): frames and
-    manifests accumulate, with ``run.begin``/``run.end`` events marking
-    the boundaries in the JSONL stream.
+    One ``Obs`` may span many runs (a sweep shares one): frames, eval
+    frames and manifests accumulate, with ``run.begin``/``run.end``
+    events marking the boundaries in the JSONL stream and
+    :meth:`run_frames_table`/:meth:`run_eval_table` slicing out the
+    current run.
     """
 
     def __init__(self, config: "ObsConfig | None" = ObsConfig(), *,
+                 health: "HealthConfig | None" = HealthConfig(),
                  jsonl=None, sink=None, out_dir=None, profile_dir=None):
         self.config = config
+        self.health_config = health
         self.sink = sink if sink is not None else (
             JsonlSink(jsonl) if jsonl is not None else None)
         self.tracer = Tracer(sink=self.sink)
         self.out_dir = pathlib.Path(out_dir) if out_dir is not None else None
         self.profile_dir = profile_dir
         self.frames: list[tuple] = []      # (rounds [m], MetricsFrame [m,...])
+        self.eval_frames: list[EvalFrame] = []
         self.manifests: list[RunManifest] = []
+        self._frames_mark = 0              # where the current run's frames
+        self._evals_mark = 0               # ... and eval frames begin
 
     # -- run lifecycle ------------------------------------------------------
     def begin_run(self, **attrs: Any) -> None:
+        self._frames_mark = len(self.frames)
+        self._evals_mark = len(self.eval_frames)
         self.tracer.event("run.begin", **attrs)
 
     def end_run(self, manifest: RunManifest) -> RunManifest:
@@ -108,12 +138,38 @@ class Obs:
     def frames_table(self) -> dict:
         """All recorded frames concatenated: ``{"round": [m], field:
         [m, ...]}`` across every run this ``Obs`` observed."""
-        if not self.frames:
+        return self._frames_table(self.frames)
+
+    def run_frames_table(self) -> dict:
+        """Like :meth:`frames_table`, restricted to the run started by
+        the most recent :meth:`begin_run` — what health judges."""
+        return self._frames_table(self.frames[self._frames_mark:])
+
+    @staticmethod
+    def _frames_table(frames) -> dict:
+        if not frames:
             return {"round": np.zeros((0,), np.int64),
                     **{f: np.zeros((0,)) for f in MetricsFrame._fields}}
-        out = {"round": np.concatenate([r for r, _ in self.frames])}
+        out = {"round": np.concatenate([r for r, _ in frames])}
         for i, name in enumerate(MetricsFrame._fields):
             out[name] = np.concatenate(
                 [np.atleast_1d(f[i]) if f[i].ndim == 0 else f[i]
-                 for _, f in self.frames])
+                 for _, f in frames])
         return out
+
+    # -- eval frames --------------------------------------------------------
+    def record_eval(self, frame: EvalFrame) -> None:
+        """Store one eval's fairness observation and mirror a
+        ``type:"eval"`` record to the sink."""
+        self.eval_frames.append(frame)
+        if self.sink is not None:
+            self.sink.emit(frame_record(frame))
+
+    def eval_table(self) -> dict:
+        """All recorded eval frames as aligned columns (numpy for the
+        scalar fields, lists for the ragged per-cluster vectors)."""
+        return _eval_table(self.eval_frames)
+
+    def run_eval_table(self) -> dict:
+        """Like :meth:`eval_table`, restricted to the current run."""
+        return _eval_table(self.eval_frames[self._evals_mark:])

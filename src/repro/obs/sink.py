@@ -22,6 +22,7 @@ import hashlib
 import json
 import pathlib
 import time
+import warnings
 from typing import Any
 
 
@@ -66,35 +67,61 @@ class JsonlSink:
 
 def read_jsonl(path) -> list[dict]:
     """Load a JSONL event log back into a list of dicts (empty when the
-    file was never written — a sink with zero events opens no file)."""
+    file was never written — a sink with zero events opens no file).
+
+    A hard kill mid-``write`` leaves a truncated FINAL line; that line
+    is skipped with a warning so a crashed run's trace still replays.
+    A malformed line anywhere else means real corruption and raises.
+    """
     p = pathlib.Path(path)
     if not p.exists():
         return []
-    return [json.loads(ln) for ln in p.read_text().splitlines()
-            if ln.strip()]
+    lines = [(i, ln) for i, ln in enumerate(p.read_text().splitlines(), 1)
+             if ln.strip()]
+    records = []
+    for pos, (lineno, ln) in enumerate(lines):
+        try:
+            records.append(json.loads(ln))
+        except json.JSONDecodeError:
+            if pos == len(lines) - 1:
+                warnings.warn(
+                    f"{p}: skipping truncated final line {lineno} "
+                    "(interrupted write)", RuntimeWarning, stacklevel=2)
+                break
+            raise
+    return records
 
 
 @dataclasses.dataclass
 class RunManifest:
-    """What ran, keyed how, and where the time went."""
-    kind: str              # run | sweep | bench | serve
-    name: str              # e.g. "facade-seed0"
-    fingerprint: str       # sha1 over the static spec/config repr
-    spec: str              # repr of the EngineSpec / config object
-    settings: dict         # preset / topo / obs / rounds / seed ...
-    timing: dict           # Tracer.rollup() snapshot
-    cache: "dict | None"   # EngineCache.stats() snapshot
-    created_unix: float
-    jax_version: str
+    """What ran, keyed how, and where the time went.
+
+    Every field carries a default and :meth:`load` drops unknown keys,
+    so old manifests read under a grown schema (missing keys default)
+    and new manifests read under an old one (extra keys ignored) —
+    schema growth never ``TypeError``s a replay.
+    """
+    kind: str = "run"           # run | sweep | bench | serve
+    name: str = ""              # e.g. "facade-seed0"
+    fingerprint: str = ""       # sha1 over the static spec/config repr
+    spec: str = ""              # repr of the EngineSpec / config object
+    settings: dict = dataclasses.field(default_factory=dict)
+    timing: dict = dataclasses.field(default_factory=dict)
+    cache: "dict | None" = None   # EngineCache.stats() snapshot
+    health: "dict | None" = None  # HealthReport.to_json() verdict
+    created_unix: float = 0.0
+    jax_version: str = ""
 
     @classmethod
     def build(cls, kind: str, name: str, spec: Any, settings: dict,
               timing: "dict | None" = None,
-              cache: "dict | None" = None) -> "RunManifest":
+              cache: "dict | None" = None,
+              health: "dict | None" = None) -> "RunManifest":
         import jax
         return cls(kind=kind, name=name,
                    fingerprint=fingerprint(repr(spec)), spec=repr(spec),
                    settings=settings, timing=timing or {}, cache=cache,
+                   health=health,
                    created_unix=time.time(), jax_version=jax.__version__)
 
     def to_json(self) -> dict:
@@ -108,7 +135,9 @@ class RunManifest:
 
     @classmethod
     def load(cls, path) -> "RunManifest":
-        return cls(**json.loads(pathlib.Path(path).read_text()))
+        data = json.loads(pathlib.Path(path).read_text())
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in data.items() if k in known})
 
 
 def bench_stamp(name: str, payload: dict) -> dict:

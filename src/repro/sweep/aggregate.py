@@ -50,10 +50,31 @@ def aggregate_cell(results, targets=()) -> dict:
             "acc_mean": pc.mean(0).tolist(),
             "acc_std": pc.std(0).tolist()})
 
+    # per-eval fairness trajectory: mean/std of each EvalFrame scalar
+    # aligned on eval round (same target_acc-truncation semantics as the
+    # accuracy trajectory above). getattr-defensive: results loaded from
+    # older summaries/pickles may predate RunResult.eval_frames.
+    fair_fields = ("dp", "eo", "worst_cluster_acc", "cluster_churn")
+    by_round: dict = {}
+    for res in results:
+        for f in getattr(res, "eval_frames", None) or ():
+            slot = by_round.setdefault(int(f.round),
+                                       {k: [] for k in fair_fields})
+            for k in fair_fields:
+                slot[k].append(getattr(f, k))
+    fairness_trajectory = []
+    for r in sorted(by_round):
+        row = {"round": r, "n": len(by_round[r][fair_fields[0]])}
+        for k in fair_fields:
+            row[f"{k}_mean"] = float(np.mean(by_round[r][k]))
+            row[f"{k}_std"] = float(np.std(by_round[r][k]))
+        fairness_trajectory.append(row)
+
     out = {
         "n_seeds": n_seeds,
         "eval_rounds": rounds,
         "trajectory": trajectory,
+        "fairness_trajectory": fairness_trajectory,
         "best_fair_acc": _ms(res.best_fair_acc() for res in results),
         "final_fair_acc": _ms(
             (res.fair_acc[-1][1] if res.fair_acc else 0.0)

@@ -34,7 +34,7 @@ from typing import Any, Sequence
 from repro.core.cache import EngineCache, data_fingerprint
 from repro.core.runner import run_experiment
 from repro.netsim import NetworkConfig
-from repro.obs import RunManifest, fingerprint
+from repro.obs import RunManifest, fingerprint, worst_verdict
 
 from .aggregate import aggregate_cell
 
@@ -73,6 +73,9 @@ class CellResult:
     skipped: bool = False  # completed in an earlier sweep run and skipped
     #                      here (summary reloaded from ckpt_dir; no
     #                      per-seed RunResults)
+    health: "dict | None" = None  # per-cell health rollup when the sweep
+    #                      ran with an Obs: {"verdict": worst-over-seeds,
+    #                      "runs": {manifest name: verdict}}
 
 
 @dataclasses.dataclass
@@ -105,6 +108,7 @@ class SweepResult:
                 "cache": c.cache_stats,
                 "error": c.error,
                 "skipped": c.skipped,
+                "health": c.health,
             }
         return {"seeds": list(self.seeds), "wall_s": self.wall_s,
                 "cache": self.cache.stats(), "cells": cells}
@@ -220,6 +224,7 @@ def run_sweep(cells: Sequence[SweepCell], seeds: Sequence[int], *,
                               "(completed in an earlier run)")
                     continue
         results = []
+        m0 = len(obs.manifests) if obs is not None else 0
         span = (tracer.span("sweep.cell", cell=cell.name)
                 if tracer is not None else contextlib.nullcontext())
         try:
@@ -246,8 +251,16 @@ def run_sweep(cells: Sequence[SweepCell], seeds: Sequence[int], *,
                 print(f"  [sweep] {cell.name}: FAILED ({e!r}); "
                       "continuing with the remaining cells")
             continue
+        health = None
+        if obs is not None and obs.health_config is not None:
+            # one manifest per seed run of this cell: roll the per-run
+            # health verdicts into the cell's worst-over-seeds verdict
+            runs = {m.name: (m.health or {}).get("verdict", "ok")
+                    for m in obs.manifests[m0:]}
+            health = {"verdict": worst_verdict(runs.values()),
+                      "runs": runs}
         out.append(CellResult(cell, seeds, results, summary,
-                              cache_stats=cache.stats()))
+                              cache_stats=cache.stats(), health=health))
         if ckpt_dir is not None:
             sum_path.write_text(json.dumps(summary, indent=2,
                                            default=float))
@@ -271,6 +284,8 @@ def run_sweep(cells: Sequence[SweepCell], seeds: Sequence[int], *,
     sweep = SweepResult(out, seeds, cache, time.perf_counter() - t0)
     if json_path is not None:
         path = sweep.save(json_path)
+        cell_verdicts = {c.cell.name: c.health["verdict"]
+                         for c in out if c.health is not None}
         manifest = RunManifest.build(
             kind="sweep", name=path.stem,
             spec=[repr(c.cell) for c in out],
@@ -278,6 +293,8 @@ def run_sweep(cells: Sequence[SweepCell], seeds: Sequence[int], *,
                       "targets": list(targets)},
             timing=tracer.rollup() if tracer is not None else
             {"wall_s": sweep.wall_s},
-            cache=cache.stats())
+            cache=cache.stats(),
+            health=({"verdict": worst_verdict(cell_verdicts.values()),
+                     "cells": cell_verdicts} if cell_verdicts else None))
         manifest.save(path.with_suffix(path.suffix + ".manifest.json"))
     return sweep

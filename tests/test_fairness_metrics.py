@@ -1,0 +1,82 @@
+"""fairness/metrics.py edge cases.
+
+The metrics are the observatory's ground truth — every per-eval
+``EvalFrame`` and every final ``RunResult.dp``/``eo`` scalar routes
+through these three functions — so the degenerate inputs the imbalanced
+cluster grids can produce (a single non-empty cluster, an empty
+per-cluster prediction array) must come back defined, not crash or NaN.
+The series-final-equals-RunResult parity pin lives in ``test_obs.py``
+(``test_obs_never_perturbs_trajectory``), where the runs already exist.
+"""
+import numpy as np
+import pytest
+
+from repro.fairness import demographic_parity, equalized_odds, fair_accuracy
+
+pytestmark = pytest.mark.tier0
+
+
+# ------------------------------------------------- < 2 non-empty clusters --
+def test_dp_single_cluster_is_zero():
+    """A gap needs two groups: one cluster (or none) has no pair to
+    compare, so the worst-case pairwise gap is 0 by definition."""
+    assert demographic_parity([np.array([0, 1, 2])], n_classes=4) == 0.0
+    assert demographic_parity([], n_classes=4) == 0.0
+
+
+def test_eo_single_cluster_is_zero():
+    assert equalized_odds([np.array([0, 1])], [np.array([0, 1])],
+                          n_classes=4) == 0.0
+    assert equalized_odds([], [], n_classes=4) == 0.0
+
+
+# ------------------------------------------------- empty pred arrays ------
+def test_dp_empty_pred_arrays():
+    """An empty prediction vector yields the all-zeros distribution
+    (max(len, 1) guard), never a divide-by-zero: empty-vs-empty gaps 0,
+    empty-vs-nonempty gaps the nonempty cluster's total mass (1.0)."""
+    empty = np.array([], np.int64)
+    assert demographic_parity([empty, empty], n_classes=4) == 0.0
+    got = demographic_parity([empty, np.array([1, 1])], n_classes=4)
+    assert got == pytest.approx(1.0)
+    assert np.isfinite(got)
+
+
+def test_eo_empty_pred_and_label_arrays():
+    """No labels of class y => TPR_y = 0 (the m.any() guard), so fully
+    empty clusters compare as all-zero rate vectors."""
+    empty = np.array([], np.int64)
+    assert equalized_odds([empty, empty], [empty, empty], n_classes=4) == 0.0
+    # one empty cluster vs a perfect one: gap = sum of the perfect TPRs
+    got = equalized_odds([empty, np.array([0, 1])],
+                         [empty, np.array([0, 1])], n_classes=4)
+    assert got == pytest.approx(2.0)
+
+
+# ------------------------------------------------- known values -----------
+def test_dp_known_value_two_clusters():
+    # cluster 0 predicts all-0, cluster 1 predicts all-1: L1 gap = 2
+    dp = demographic_parity([np.zeros(4, np.int64), np.ones(4, np.int64)],
+                            n_classes=2)
+    assert dp == pytest.approx(2.0)
+
+
+def test_dp_is_max_over_pairs():
+    # three clusters; the worst pair defines the reported gap
+    a, b = np.zeros(4, np.int64), np.ones(4, np.int64)
+    mixed = np.array([0, 0, 1, 1], np.int64)
+    assert demographic_parity([a, mixed, b], n_classes=2) == pytest.approx(
+        demographic_parity([a, b], n_classes=2))
+
+
+def test_fair_accuracy_equal_clusters_no_penalty():
+    # equal accuracies: penalty term is 1, Eq. 5 gives lam*a + (1-lam)
+    lam = 2.0 / 3.0
+    assert fair_accuracy([0.8, 0.8]) == pytest.approx(lam * 0.8 + (1 - lam))
+
+
+def test_fair_accuracy_penalizes_spread():
+    assert fair_accuracy([0.9, 0.5]) < fair_accuracy([0.7, 0.7])
+    # single cluster: spread is 0, reduces to lam*acc + (1-lam)
+    lam = 2.0 / 3.0
+    assert fair_accuracy([0.6]) == pytest.approx(lam * 0.6 + (1 - lam))

@@ -54,6 +54,9 @@ def _assert_runs_identical(ref, got):
     assert ref.comm.seconds == got.comm.seconds
     np.testing.assert_array_equal(np.asarray(ref.node_acc),
                                   np.asarray(got.node_acc))
+    # the per-eval fairness trajectory (plain-scalar NamedTuples) must be
+    # value-identical too — eval telemetry is pure observation
+    assert ref.eval_frames == got.eval_frames
     for (r1, c1), (r2, c2) in zip(ref.cluster_history, got.cluster_history):
         assert r1 == r2
         np.testing.assert_array_equal(c1, c2)
@@ -75,6 +78,19 @@ def test_obs_never_perturbs_trajectory(algo, engine, tiny_ds, tmp_path):
     # and telemetry actually observed every round
     assert obs.frames_table()["round"].tolist() == [1, 2, 3]
     assert len(obs.manifests) == 1
+    # eval-side telemetry observed every eval, and the series' FINAL
+    # entry is bit-for-bit the run's final DP/EO scalars (they are read
+    # off the frame, never recomputed) — for all 5 algorithms on both
+    # drivers via this parametrization
+    et = obs.eval_table()
+    assert et["round"].tolist() == [1, 2, 3]
+    last = got.eval_frames[-1]
+    assert last.dp == got.dp and last.eo == got.eo
+    assert et["dp"][-1] == got.dp and et["eo"][-1] == got.eo
+    assert last.fair_acc == got.fair_acc[-1][1]
+    # churn only exists where a cluster assignment does
+    if algo != "facade":
+        assert et["cluster_churn"].tolist() == [0.0, 0.0, 0.0]
 
 
 def test_obs_parity_under_netsim(tiny_ds):
